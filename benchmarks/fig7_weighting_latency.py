@@ -1,0 +1,94 @@
+"""Paper Fig. 7: per-window latency of speed/batch/hybrid inference and the
+static-vs-dynamic weighting overhead, measured with the REAL modules (jit'd
+LSTM inference + scipy-SLSQP / closed-form DWA) on this container.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (
+    HybridStreamAnalytics,
+    WindowedStream,
+    WindowPlan,
+    lstm_forecaster,
+    make_supervised,
+    pretrain_batch_model,
+)
+from repro.streams.normalize import MinMaxScaler
+from repro.streams.sources import gradual_drift, wind_turbine_series
+
+
+def run(n_windows: int = 12, records: int = 250, fast: bool = False
+        ) -> Dict[str, dict]:
+    if fast:
+        n_windows = 5
+    cfg = get_config("lstm-paper")
+    hist = wind_turbine_series(2000, seed=0)
+    stream = gradual_drift(wind_turbine_series(n_windows * records, seed=3),
+                           alphas=np.full(5, 6e-4), seed=1)
+    scaler = MinMaxScaler.fit(hist)
+    fc_batch = lstm_forecaster(cfg, epochs=10 if fast else 25, batch_size=512)
+    fc_speed = lstm_forecaster(cfg, epochs=12 if fast else 40, batch_size=64)
+    bp, _ = pretrain_batch_model(
+        fc_batch, make_supervised(scaler.transform(hist), 5, 0),
+        jax.random.PRNGKey(0))
+    plan = WindowPlan(n_windows=n_windows, records_per_window=records, lag=5)
+    ws = WindowedStream(scaler.transform(stream), plan)
+
+    # jit warmup so the first measured mode doesn't absorb compile time
+    warm = HybridStreamAnalytics(fc_speed, mode=("static", 0.5))
+    warm.run(WindowedStream(scaler.transform(stream[: 2 * records]),
+                            WindowPlan(2, records, 5)), bp, jax.random.PRNGKey(9))
+
+    out = {}
+    for name, mode, solver in (
+        ("static", ("static", 0.5), "closed_form"),
+        ("dynamic_scipy", "dynamic", "scipy"),
+        ("dynamic_closed_form", "dynamic", "closed_form"),
+    ):
+        h = HybridStreamAnalytics(fc_speed, mode=mode, dwa_solver=solver)
+        res = h.run(ws, bp, jax.random.PRNGKey(1))
+        lat = res.mean_latency()
+        out[name] = lat
+    return out
+
+
+def report(fast: bool = False) -> str:
+    res = run(fast=fast)
+    lines = ["# Fig. 7 analog: per-window module latency (s, measured)"]
+    keys = ("speed_infer", "batch_infer", "hybrid_infer", "weight_solve",
+            "speed_train")
+    lines.append(f"{'mode':<22}" + "".join(f"{k:>14}" for k in keys))
+    for name, lat in res.items():
+        lines.append(f"{name:<22}" + "".join(f"{lat[k]:>14.4f}" for k in keys))
+    def total(mode):
+        lat = res[mode]
+        return lat["speed_infer"] + lat["batch_infer"] + lat["hybrid_infer"]
+
+    dyn = res["dynamic_scipy"]["hybrid_infer"]
+    sta = res["static"]["hybrid_infer"]
+    pct = (total("dynamic_scipy") - total("static")) / max(
+        total("static"), 1e-12) * 100
+    lines.append(
+        f"\n  dynamic (SLSQP) adds {(dyn-sta)*1e3:.2f} ms/window to hybrid "
+        f"inference (+{pct:.1f}% of the total inference path).  The paper's "
+        f"+14.82% is relative to its Pi/TFLite stack where hybrid inference "
+        f"costs seconds; the validated claim is the sign and mechanism "
+        f"(solver time), not the ratio."
+    )
+    cf = res["dynamic_closed_form"]["weight_solve"]
+    sp = res["dynamic_scipy"]["weight_solve"]
+    lines.append(f"  beyond-paper: closed-form DWA solve {cf*1e6:.0f} us vs "
+                 f"SLSQP {sp*1e6:.0f} us ({sp/max(cf,1e-12):.0f}x faster)")
+    lines.append(f"  check dynamic>static hybrid latency: "
+                 f"{'PASS' if dyn > sta else 'FAIL'}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

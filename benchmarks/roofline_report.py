@@ -1,0 +1,136 @@
+"""§Roofline report: read the dry-run artifacts (experiments/dryrun/*.json)
+and emit the per-(arch x shape x mesh) three-term roofline table with the
+dominant bottleneck and MODEL_FLOPS/HLO_FLOPs useful ratio.
+
+model_flops is recomputed here (not read from the artifact) so analytic
+fixes do not require re-compiling the sweep.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.configs import get_config, get_shape
+from repro.launch import analysis
+
+MITIGATIONS = {
+    "compute": "cut redundant matmul work (dispatch einsums, remat policy)",
+    "memory": "fuse/flash the attention path; bf16 intermediates; smaller "
+              "dispatch groups",
+    "collective": "re-shard to cut all-reduce volume (FSDP gather schedule, "
+                  "TP axis choice); overlap collectives with compute",
+}
+
+
+def load(dryrun_dir: str = "experiments/dryrun") -> List[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def recompute(rec: dict) -> dict:
+    """Roofline row from an artifact, with fresh analytic MODEL_FLOPS."""
+    cfg = get_config(rec["arch"])
+    shape = get_shape(rec["shape"])
+    hs = rec["hlo_summary"]
+    summ = analysis.HLOSummary(
+        dot_flops=hs["dot_flops_per_chip"],
+        traffic_bytes=hs["traffic_bytes_per_chip"],
+        collective_bytes=hs["collective_bytes_per_chip"],
+        collectives=hs.get("collectives", {}),
+        n_while=hs.get("n_while", 0),
+        trip_counts=hs.get("trip_counts", []),
+        param_bytes=hs.get("param_bytes_per_chip", 0),
+        output_bytes=0,
+    )
+    mf = analysis.model_flops(cfg, shape)
+    rl = analysis.roofline(summ, rec["n_chips"], mf)
+    hbm = rec.get("bytes_per_device", 0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": rl.compute_s, "memory_s": rl.memory_s,
+        "collective_s": rl.collective_s, "dominant": rl.dominant,
+        "useful_ratio": min(rl.useful_ratio, 10.0),
+        "bytes_per_device_GB": hbm / 1e9,
+        "fits_hbm": hbm <= 16e9,
+        "mitigation": MITIGATIONS[rl.dominant],
+    }
+
+
+def report(dryrun_dir: str = "experiments/dryrun", mesh: str = "16x16") -> str:
+    recs = load(dryrun_dir)
+    lines = [f"# §Roofline: per-chip seconds per step ({mesh} mesh, TPU v5e "
+             "constants: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)"]
+    lines.append(
+        f"{'arch':<22}{'shape':<13}{'compute_s':>11}{'memory_s':>11}"
+        f"{'coll_s':>11}{'dominant':>11}{'useful':>8}{'GB/dev':>8}{'fits':>6}"
+    )
+    skips = []
+    for rec in recs:
+        if rec["mesh"] != mesh:
+            continue
+        if rec["status"] == "skip":
+            skips.append(rec)
+            continue
+        if rec["status"] != "ok":
+            lines.append(f"{rec['arch']:<22}{rec['shape']:<13} FAILED")
+            continue
+        row = recompute(rec)
+        lines.append(
+            f"{row['arch']:<22}{row['shape']:<13}{row['compute_s']:>11.3e}"
+            f"{row['memory_s']:>11.3e}{row['collective_s']:>11.3e}"
+            f"{row['dominant']:>11}{row['useful_ratio']:>8.3f}"
+            f"{row['bytes_per_device_GB']:>8.1f}"
+            f"{'yes' if row['fits_hbm'] else 'NO':>6}"
+        )
+    if skips:
+        lines.append("\n# recorded skips (see DESIGN.md §Arch-applicability)")
+        for rec in skips:
+            lines.append(f"  {rec['arch']:<22}{rec['shape']:<13} "
+                         f"{rec.get('skip_reason', '')[:60]}")
+    return "\n".join(lines)
+
+
+def perf_report(perf_dir: str = "experiments/perf",
+                dryrun_dir: str = "experiments/dryrun") -> str:
+    """§Perf: paper-faithful baseline vs hillclimb variants (single-pod)."""
+    base = {(r["arch"], r["shape"]): r for r in load(dryrun_dir)
+            if r["status"] == "ok" and r["mesh"] == "16x16"}
+    lines = ["# §Perf variants (single-pod; baselines from experiments/dryrun)"]
+    lines.append(f"{'variant':<48}{'compute_s':>11}{'memory_s':>11}"
+                 f"{'coll_s':>11}{'dominant':>11}")
+    printed_base = set()
+    for f in sorted(glob.glob(os.path.join(perf_dir, "*.json"))):
+        r = json.load(open(f))
+        if r["status"] != "ok":
+            continue
+        key = (r["arch"], r["shape"])
+        if key in base and key not in printed_base:
+            printed_base.add(key)
+            b = recompute(base[key])
+            lines.append(
+                f"{r['arch'] + ' x ' + r['shape'] + ' [BASELINE]':<48}"
+                f"{b['compute_s']:>11.3e}{b['memory_s']:>11.3e}"
+                f"{b['collective_s']:>11.3e}{b['dominant']:>11}"
+            )
+        row = recompute(r)
+        name = os.path.basename(f)[:-5]
+        lines.append(
+            f"{name:<48}{row['compute_s']:>11.3e}{row['memory_s']:>11.3e}"
+            f"{row['collective_s']:>11.3e}{row['dominant']:>11}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())
+    print()
+    print(report(mesh="2x16x16"))
+    print()
+    try:
+        print(perf_report())
+    except Exception as e:  # noqa: BLE001
+        print("no perf artifacts:", e)

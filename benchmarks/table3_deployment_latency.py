@@ -1,0 +1,84 @@
+"""Paper Table 3: inference-phase latency (computation/communication/total)
+for batch / speed / hybrid inference under the three deployment modalities,
+plus the training-phase latency and the edge-centric OOM reproduction.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.calibrate import Calibration, calibrate
+from repro.runtime import (
+    EdgeCloudSimulation,
+    cloud_centric,
+    edge_centric,
+    edge_cloud_integrated,
+    paper_topology,
+)
+
+ROWS = ("speed_inference", "batch_inference", "hybrid_inference")
+
+
+def run(cal: Calibration | None = None, n_windows: int = 25,
+        fast: bool = False) -> Dict[str, dict]:
+    cal = cal or calibrate(fast=fast)
+    topo = paper_topology()
+    out = {}
+    for factory in (cloud_centric, edge_centric, edge_cloud_integrated):
+        dep = factory()
+        sim = EdgeCloudSimulation(dep, topo, cal.cost, dynamic_weighting=True)
+        res = sim.run(n_windows)
+        t = res.table3()
+        out[dep.name] = {
+            "rows": {m: t.get(m, {}) for m in ROWS},
+            "training": t.get("speed_training", {}),
+            "model_sync_comm": t.get("model_sync", {}).get("communication", 0.0),
+            "failures": len(res.failures),
+            "oom": bool(res.failures),
+        }
+    return out
+
+
+def report(fast: bool = False) -> str:
+    res = run(fast=fast)
+    lines = ["# Table 3 analog: inference-phase latency per deployment (s)"]
+    lines.append(f"{'deployment':<24}{'module':<18}{'comp':>8}{'comm':>8}{'total':>8}")
+    for dep, r in res.items():
+        for m in ROWS:
+            row = r["rows"][m]
+            lines.append(
+                f"{dep:<24}{m:<18}{row.get('computation', 0):>8.2f}"
+                f"{row.get('communication', 0):>8.2f}{row.get('total', 0):>8.2f}"
+            )
+        tr = r["training"]
+        if r["oom"]:
+            lines.append(f"{dep:<24}{'speed_training':<18}{'OOM (edge capacity exceeded)':>24}")
+        else:
+            lines.append(
+                f"{dep:<24}{'speed_training':<18}{tr.get('computation', 0):>8.2f}"
+                f"{tr.get('communication', 0) + r['model_sync_comm']:>8.2f}"
+                f"{tr.get('total', 0) + r['model_sync_comm']:>8.2f}"
+            )
+    # paper-claim checks
+    tot = {d: sum(r["rows"][m].get("total", 0) for m in ROWS)
+           for d, r in res.items()}
+    checks = {
+        "cloud_comm>edge_comm (inference)": (
+            res["cloud-centric"]["rows"]["batch_inference"]["communication"]
+            > res["edge-cloud-integrated"]["rows"]["batch_inference"]["communication"]
+        ),
+        "edge_centric_training_OOM": res["edge-centric"]["oom"],
+        "integrated_beats_edge_centric_total": (
+            tot["edge-cloud-integrated"] < tot["edge-centric"]
+        ),
+        "integrated_trains_without_capacity_limits": (
+            not res["edge-cloud-integrated"]["oom"]
+        ),
+    }
+    lines.append("\n# paper-claim checks")
+    for k, v in checks.items():
+        lines.append(f"  {k}: {'PASS' if v else 'FAIL'}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

@@ -1,0 +1,225 @@
+"""Adaptive hybrid stream analytics (paper Sec. 5): lambda-architecture
+orchestration of batch, speed and hybrid layers over a windowed stream.
+
+Per time window t (paper Fig. 4):
+
+  inference phase: batch inference with the one-time pre-trained model M^b;
+  speed inference with M^s_{t-1} (trained on the previous window); hybrid
+  inference combines the two with static or dynamic (Algorithm 1) weights.
+
+  training phase (async): speed training of M^s_t on window t's records.
+
+The orchestrator is generic over ``Forecaster`` so any model-zoo member can
+be the backbone; ``lstm_forecaster`` builds the paper's exact setup
+(batch: 50 epochs x bs 512; speed: 100 epochs x bs 64; lr 1e-3).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.weighting import (
+    combine,
+    dwa_closed_form,
+    dwa_scipy,
+    rmse,
+    static_weights,
+)
+from repro.core.windows import WindowedStream
+from repro.models.model import Model, get_model
+from repro.training.train_loop import fit
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class Forecaster:
+    """train(data, params, key) -> (params, wall_s); predict(params, x) -> y."""
+
+    train: Callable[[Dict[str, np.ndarray], Optional[Params], jax.Array],
+                    Tuple[Params, float]]
+    predict: Callable[[Params, np.ndarray], np.ndarray]
+
+
+def lstm_forecaster(cfg: ModelConfig, *, epochs: int, batch_size: int,
+                    lr: float = 1e-3, warm_start: bool = False) -> Forecaster:
+    model = get_model(cfg)
+    from repro.models import lstm as lstm_mod
+
+    predict_jit = jax.jit(lambda p, x: lstm_mod.predict(cfg, p, x))
+
+    def train(data, params, key):
+        res = fit(model, data, epochs=epochs, batch_size=batch_size, lr=lr,
+                  params=params if warm_start else None, key=key)
+        return res.params, res.wall_time_s
+
+    def predict(params, x):
+        return np.asarray(predict_jit(params, x))
+
+    return Forecaster(train=train, predict=predict)
+
+
+@dataclass
+class WindowRecord:
+    window: int
+    rmse_batch: float
+    rmse_speed: float
+    rmse_hybrid: float
+    w_speed: float
+    w_batch: float
+    t_speed_train: float = 0.0
+    t_batch_infer: float = 0.0
+    t_speed_infer: float = 0.0
+    t_hybrid_infer: float = 0.0
+    t_weight_solve: float = 0.0
+
+
+@dataclass
+class HybridRunResult:
+    records: List[WindowRecord]
+    mode: str
+
+    def mean_rmse(self) -> Dict[str, float]:
+        return {
+            "batch": float(np.mean([r.rmse_batch for r in self.records])),
+            "speed": float(np.mean([r.rmse_speed for r in self.records])),
+            "hybrid": float(np.mean([r.rmse_hybrid for r in self.records])),
+        }
+
+    def best_fraction(self) -> Dict[str, float]:
+        """Paper Tables 4-6: time percentage each inference is the best."""
+        wins = {"batch": 0, "speed": 0, "hybrid": 0}
+        for r in self.records:
+            best = min(
+                ("speed", r.rmse_speed),
+                ("batch", r.rmse_batch),
+                ("hybrid", r.rmse_hybrid),
+                key=lambda kv: kv[1],
+            )[0]
+            wins[best] += 1
+        n = max(len(self.records), 1)
+        return {k: v / n for k, v in wins.items()}
+
+    def mean_latency(self) -> Dict[str, float]:
+        return {
+            "speed_train": float(np.mean([r.t_speed_train for r in self.records])),
+            "batch_infer": float(np.mean([r.t_batch_infer for r in self.records])),
+            "speed_infer": float(np.mean([r.t_speed_infer for r in self.records])),
+            "hybrid_infer": float(np.mean([r.t_hybrid_infer for r in self.records])),
+            "weight_solve": float(np.mean([r.t_weight_solve for r in self.records])),
+        }
+
+
+class HybridStreamAnalytics:
+    """The adaptive hybrid learner.
+
+    mode: "dynamic" (Algorithm 1), ("static", w_speed), "speed", "batch".
+    ``dwa_solver``: "scipy" (paper SLSQP) or "closed_form" (TPU-native).
+    """
+
+    def __init__(
+        self,
+        forecaster: Forecaster,
+        mode: str | Tuple[str, float] = "dynamic",
+        dwa_solver: str = "closed_form",
+    ):
+        self.forecaster = forecaster
+        self.mode = mode
+        self.dwa_solver = dwa_solver
+
+    def _weights(self, prev_preds, prev_y) -> Tuple[float, float, float]:
+        """(w_speed, w_batch, solve_seconds) for the current window."""
+        if isinstance(self.mode, tuple) and self.mode[0] == "static":
+            ws, wb = static_weights(self.mode[1])
+            return ws, wb, 0.0
+        if self.mode == "dynamic":
+            if prev_preds is None:
+                return 0.5, 0.5, 0.0
+            t0 = time.perf_counter()
+            if self.dwa_solver == "scipy":
+                w = dwa_scipy([prev_preds[0], prev_preds[1]], prev_y)
+                ws, wb = float(w[0]), float(w[1])
+            else:
+                ws, wb = dwa_closed_form(prev_preds[0], prev_preds[1], prev_y)
+            return ws, wb, time.perf_counter() - t0
+        # degenerate modes for baselines
+        if self.mode == "speed":
+            return 1.0, 0.0, 0.0
+        if self.mode == "batch":
+            return 0.0, 1.0, 0.0
+        raise ValueError(f"unknown mode {self.mode!r}")
+
+    def run(
+        self,
+        stream: WindowedStream,
+        batch_params: Params,
+        key: jax.Array,
+        start_window: int = 1,
+    ) -> HybridRunResult:
+        fc = self.forecaster
+        records: List[WindowRecord] = []
+        speed_params: Optional[Params] = None
+        prev_preds: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        prev_y: Optional[np.ndarray] = None
+
+        n = len(stream)
+        for t in range(n):
+            data = stream.supervised(t)
+            x, y = data["x"], data["y"]
+            if t >= start_window and speed_params is not None and len(x) > 0:
+                t0 = time.perf_counter()
+                pb = fc.predict(batch_params, x)
+                t_b = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                ps = fc.predict(speed_params, x)
+                t_s = time.perf_counter() - t0
+
+                ws, wb, t_w = self._weights(prev_preds, prev_y)
+                t0 = time.perf_counter()
+                ph = combine([ps, pb], [ws, wb])
+                t_h = time.perf_counter() - t0 + t_w
+
+                records.append(
+                    WindowRecord(
+                        window=t,
+                        rmse_batch=rmse(y, pb),
+                        rmse_speed=rmse(y, ps),
+                        rmse_hybrid=rmse(y, ph),
+                        w_speed=ws,
+                        w_batch=wb,
+                        t_batch_infer=t_b,
+                        t_speed_infer=t_s,
+                        t_hybrid_infer=t_h,
+                        t_weight_solve=t_w,
+                    )
+                )
+                # Algorithm 1 inputs for the *next* window: predictions of
+                # (M^s trained below, M^b) on this window's data are produced
+                # after speed training; the paper stacks M^s_{t-1} with the
+                # previous window's test set.
+            # training phase: speed model for the next window
+            key, sub = jax.random.split(key)
+            t0 = time.perf_counter()
+            new_speed, t_train = fc.train(data, speed_params, sub)
+            if records and records[-1].window == t:
+                records[-1].t_speed_train = t_train
+            # stash Algorithm-1 inputs: predictions of (M^s_t, M^b) on
+            # window t — consumed when weighting window t+1
+            if len(x) > 0:
+                prev_preds = (fc.predict(new_speed, x), fc.predict(batch_params, x))
+                prev_y = y
+            speed_params = new_speed
+        return HybridRunResult(records=records, mode=str(self.mode))
+
+
+def pretrain_batch_model(
+    forecaster: Forecaster, historical: Dict[str, np.ndarray], key: jax.Array
+) -> Tuple[Params, float]:
+    """One-time batch training on historical data (paper: 20k observations,
+    50 epochs, batch 512)."""
+    return forecaster.train(historical, None, key)

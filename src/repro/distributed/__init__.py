@@ -1,0 +1,10 @@
+from repro.distributed.sharding import (  # noqa: F401
+    AxisRules,
+    DEFAULT_RULES,
+    PARAM_AXES,
+    logical_to_spec,
+    param_axes_for,
+    param_shardings,
+    shard,
+    use_mesh_rules,
+)

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package has:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd wrapper (interpret=True on CPU so kernels validate here)
+  ref.py    — pure-jnp oracle the tests assert against
+
+Kernels are NOT used in the multi-pod dry-run HLO (Mosaic does not lower on
+the CPU placeholder backend); ``ModelConfig.use_pallas`` switches the model
+zoo onto them when running on real TPUs.
+"""
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Interpret kernels unless a real TPU backend is present."""
+    return jax.default_backend() != "tpu"

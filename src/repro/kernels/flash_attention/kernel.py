@@ -1,0 +1,133 @@
+"""Flash attention (TPU Pallas), causal with optional sliding window.
+
+TPU adaptation of the flash algorithm: Q blocks ride the grid's parallel
+dims, the KV loop is a ``fori_loop`` inside the kernel with running
+(max, sum, acc) statistics held in f32 — the (Sq, Sk) score matrix never
+exists.  Block shapes default to (128, head_dim): 128 is the MXU systolic
+edge, and a (128, D) x (D, 128) product per step keeps the MXU fed while the
+(block_q, D) accumulator stays in VREGs/VMEM.
+
+Causality + sliding window are handled at *block granularity* first (skipped
+blocks cost one predicate, no compute) and at element granularity inside
+surviving blocks via the position mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq_k: int,
+               causal: bool, window: int, scale: float, block_q: int):
+    qi = pl.program_id(1)  # q block index
+    q = q_ref[0].astype(jnp.float32) * scale  # (bq, D)
+    D = q.shape[-1]
+    n_kv = pl.cdiv(seq_k, block_k)
+
+    q_start = qi * block_q
+    q_pos = q_start + jax.lax.iota(jnp.int32, block_q)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.dslice(j * block_k, block_k), :]
+        v = v_ref[0, pl.dslice(j * block_k, block_k), :]
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+        kv_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = kv_pos[None, :] < seq_k
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = mask & ((q_pos[:, None] - kv_pos[None, :]) < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(m <= NEG_INF / 2, 0.0, jnp.exp(m - m_safe))
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    # block-level skipping: causal -> only blocks with kv_start <= q_end;
+    # window  -> only blocks with kv_end > q_start - window
+    if causal:
+        hi = jnp.minimum(n_kv, (q_start + block_q + block_k - 1) // block_k)
+    else:
+        hi = n_kv
+    if window > 0:
+        lo = jnp.maximum(0, (q_start - window + 1) // block_k)
+    else:
+        lo = 0
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    a0 = jnp.zeros((block_q, D), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, H, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    # pad sequences to block multiples: dynamic_slice clamps OOB starts, so
+    # ragged tails must be materialized as zero padding (masked via seq_k)
+    pq = (-Sq) % bq
+    pk = (-Sk) % bk
+    qf = q.reshape(B * H, Sq, D)
+    kf = k.reshape(B * H, Sk, D)
+    vf = v.reshape(B * H, Sk, D)
+    if pq:
+        qf = jnp.pad(qf, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        kf = jnp.pad(kf, ((0, 0), (0, pk), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pk), (0, 0)))
+    Sq_p, Sk_p = Sq + pq, Sk + pk
+    grid = (B * H, pl.cdiv(Sq_p, bq))
+    kern = functools.partial(
+        _fa_kernel,
+        block_k=bk,
+        seq_k=Sk,
+        causal=causal,
+        window=window,
+        scale=D**-0.5,
+        block_q=bq,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, i: (bh, i, 0)),
+            pl.BlockSpec((1, Sk_p, D), lambda bh, i: (bh, 0, 0)),
+            pl.BlockSpec((1, Sk_p, D), lambda bh, i: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, i: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq_p, D), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out[:, :Sq].reshape(B, H, Sq, D)

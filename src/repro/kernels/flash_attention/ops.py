@@ -1,0 +1,30 @@
+"""Public op: GQA-aware flash attention in the model zoo's (B, S, H, D)
+layout, dispatching to the Pallas kernel (TPU) or interpret mode (CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def gqa_flash(q, k, v, *, causal=True, window=0, interpret=None):
+    """q: (B, S, Hq, D); k, v: (B, S, Hkv, D) -> (B, S, Hq, D).
+    KV heads are repeated to Q heads (the kernel is MHA-layout)."""
+    interp = default_interpret() if interpret is None else interpret
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    out = flash_attention(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=causal,
+        window=window,
+        interpret=interp,
+    )
+    return out.transpose(0, 2, 1, 3)

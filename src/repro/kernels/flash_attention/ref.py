@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash attention (materializes the score matrix)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q,k,v: (B, H, S, D) MHA layout."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (D**-0.5)
+    q_pos = jnp.arange(Sq)[:, None]
+    kv_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (kv_pos <= q_pos)
+    if window > 0:
+        mask = mask & ((q_pos - kv_pos) < window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None, None], p, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

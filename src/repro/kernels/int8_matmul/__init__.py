@@ -1,0 +1,1 @@
+from repro.kernels.int8_matmul import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,15 @@
+"""Public op: QTensor-aware int8 matmul dispatching to the Pallas kernel."""
+from __future__ import annotations
+
+from repro.kernels import default_interpret
+from repro.kernels.int8_matmul.kernel import int8_matmul as _kernel_mm
+from repro.serving.quantize import QTensor
+
+
+def qmatmul(x, qt: QTensor, interpret=None):
+    """x: (..., K) @ qt -> (..., N) via the fused dequant kernel."""
+    interp = default_interpret() if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _kernel_mm(x2, qt.q, qt.scale.reshape(-1), interpret=interp)
+    return y.reshape(*lead, -1)

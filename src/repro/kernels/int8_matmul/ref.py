@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the int8 dequant matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x, q, scale):
+    w = q.astype(jnp.float32) * scale[None, :]
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.lstm_cell import kernel, ops, ref  # noqa: F401

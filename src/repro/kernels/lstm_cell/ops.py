@@ -1,0 +1,34 @@
+"""jit'd public ops for the fused LSTM cell kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.lstm_cell.kernel import lstm_cell
+
+
+def lstm_step(x_t, h, c, wx, wh, b, interpret: bool | None = None):
+    interp = default_interpret() if interpret is None else interpret
+    return lstm_cell(x_t, h, c, wx, wh, b, interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def lstm_sequence(x, wx, wh, b, interpret: bool | None = None):
+    """x: (B, T, F) -> final hidden (B, H); fused-cell scan over time.
+    The (F+H, 4H) weights stay VMEM-resident across the scan on TPU."""
+    interp = default_interpret() if interpret is None else interpret
+    B = x.shape[0]
+    H = wh.shape[0]
+    h = jnp.zeros((B, H), x.dtype)
+    c = jnp.zeros((B, H), x.dtype)
+
+    def step(carry, xt):
+        h, c = carry
+        h, c = lstm_cell(xt, h, c, wx, wh, b, interpret=interp)
+        return (h, c), None
+
+    (h, c), _ = jax.lax.scan(step, (h, c), x.transpose(1, 0, 2))
+    return h

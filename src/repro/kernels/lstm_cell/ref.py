@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the fused LSTM cell kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    z = (
+        x.astype(jnp.float32) @ wx.astype(jnp.float32)
+        + h.astype(jnp.float32) @ wh.astype(jnp.float32)
+        + b.astype(jnp.float32)
+    )
+    H = h.shape[-1]
+    i, f, g, o = z[:, :H], z[:, H : 2 * H], z[:, 2 * H : 3 * H], z[:, 3 * H :]
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c_new = f * c.astype(jnp.float32) + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new.astype(h.dtype), c_new.astype(c.dtype)
+
+
+def lstm_sequence_ref(x, wx, wh, b):
+    """x: (B, T, F) -> final hidden (B, H)."""
+    B = x.shape[0]
+    H = wh.shape[0]
+    h = jnp.zeros((B, H), x.dtype)
+    c = jnp.zeros((B, H), x.dtype)
+
+    def step(carry, xt):
+        h, c = carry
+        h, c = lstm_cell_ref(xt, h, c, wx, wh, b)
+        return (h, c), None
+
+    (h, c), _ = jax.lax.scan(step, (h, c), x.transpose(1, 0, 2))
+    return h

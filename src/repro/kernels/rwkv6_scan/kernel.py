@@ -1,0 +1,104 @@
+"""RWKV6 WKV scan kernel (data-dependent decay) — TPU Pallas.
+
+Recurrence per (batch, head), head size N:
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+TPU adaptation of the (GPU, warp-per-head) reference kernels: the (N, N)
+state lives in a VMEM scratch that persists across the *sequential* chunk
+grid dimension; each grid step streams one (chunk, N) tile of r/k/v/w through
+VMEM and steps the recurrence with rank-1 updates.  Head-parallelism rides
+the first (parallel) grid dim instead of warps; N=64 keeps the state tile at
+one 64x64 f32 block, VREG-friendly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out, state,
+                *, chunk: int, n_chunks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        state[...] = jnp.zeros_like(state)
+
+    r = r_ref[0].astype(jnp.float32)  # (chunk, N)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)  # (N,)
+
+    def body(t, carry):
+        S, y = carry
+        kt, vt, rt, wt = k[t], v[t], r[t], w[t]  # (N,)
+        kv = kt[:, None] * vt[None, :]  # (N, N)
+        yt = rt @ (S + u[:, None] * kv)  # (N,)
+        S = wt[:, None] * S + kv
+        y = jax.lax.dynamic_update_slice(y, yt[None], (t, 0))
+        return S, y
+
+    S0 = state[...]
+    y0 = jnp.zeros((chunk, k.shape[-1]), jnp.float32)
+    S, y = jax.lax.fori_loop(0, chunk, body, (S0, y0))
+    state[...] = S
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(j == n_chunks - 1)
+    def _():
+        s_out[0] = S.astype(s_out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(
+    r: jax.Array,  # (BH, T, N)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # decays in (0,1)
+    u: jax.Array,  # (BH, N) bonus
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+):
+    """Returns (y (BH, T, N) f32-accurate, final state (BH, N, N) f32)."""
+    BH, T, N = r.shape
+    ct = min(chunk, T)
+    pad = (-T) % ct
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        # pad decay with ones so padded steps keep the state unchanged
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    Tp = T + pad
+    n_chunks = Tp // ct
+    kern = functools.partial(_wkv_kernel, chunk=ct, n_chunks=n_chunks)
+    y, s = pl.pallas_call(
+        kern,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, ct, N), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, ct, N), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, ct, N), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, ct, N), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, N), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ct, N), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, N, N), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Tp, N), r.dtype),
+            jax.ShapeDtypeStruct((BH, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y[:, :T], s

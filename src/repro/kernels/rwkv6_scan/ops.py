@@ -1,0 +1,22 @@
+"""Public op: model-zoo layout wrapper for the RWKV6 WKV kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan
+
+
+def wkv(r, k, v, w, u, *, chunk: int = 128, interpret=None):
+    """r,k,v,w: (B, T, H, N); u: (H, N) -> (y (B,T,H,N), state (B,H,N,N))."""
+    interp = default_interpret() if interpret is None else interpret
+    B, T, H, N = r.shape
+
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, T, N)
+
+    u_full = jnp.broadcast_to(u[None], (B, H, N)).reshape(B * H, N)
+    y, s = rwkv6_scan(flat(r), flat(k), flat(v), flat(w), u_full,
+                      chunk=chunk, interpret=interp)
+    y = y.reshape(B, H, T, N).transpose(0, 2, 1, 3)
+    return y, s.reshape(B, H, N, N)

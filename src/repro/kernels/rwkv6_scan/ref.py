@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the RWKV6 WKV scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u, state0=None):
+    """r,k,v,w: (BH, T, N); u: (BH, N).  Returns (y, final_state)."""
+    BH, T, N = r.shape
+    S0 = jnp.zeros((BH, N, N), jnp.float32) if state0 is None else state0
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs  # (BH, N)
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bn,bnm->bm", rt, S + u[..., None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    xs = tuple(
+        a.transpose(1, 0, 2).astype(jnp.float32) for a in (r, k, v, w)
+    )
+    S, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2).astype(r.dtype), S

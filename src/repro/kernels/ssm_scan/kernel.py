@@ -1,0 +1,105 @@
+"""Mamba2 selective-state scan kernel — TPU Pallas.
+
+Per (batch, head) with head dim P and state dim N, scalar decay A per head:
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * (x_t outer B_t)
+    y_t = h_t @ C_t + D_head * x_t
+
+TPU adaptation of the Mamba2 SSD chunked algorithm: instead of the GPU's
+warp-specialized chunk-state matmuls, the (P, N) state persists in VMEM
+scratch across the sequential chunk grid dim, with the per-chunk work done as
+rank-1 updates in VREGs.  P=64, N=64 keeps the state one (64, 64) f32 tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, d_ref, y_ref, s_out,
+                state, *, chunk: int, n_chunks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0].astype(jnp.float32)  # (chunk, P)
+    b = b_ref[0].astype(jnp.float32)  # (chunk, N)
+    c = c_ref[0].astype(jnp.float32)  # (chunk, N)
+    dt = dt_ref[0].astype(jnp.float32)  # (chunk,)
+    a = a_ref[0][0].astype(jnp.float32)  # scalar A (negative)
+    dsk = d_ref[0][0].astype(jnp.float32)  # scalar skip D
+
+    def body(t, carry):
+        h, y = carry
+        decay = jnp.exp(dt[t] * a)
+        upd = (dt[t] * x[t])[:, None] * b[t][None, :]  # (P, N)
+        h = decay * h + upd
+        yt = h @ c[t] + dsk * x[t]  # (P,)
+        y = jax.lax.dynamic_update_slice(y, yt[None], (t, 0))
+        return h, y
+
+    h0 = state[...]
+    y0 = jnp.zeros_like(x)
+    h, y = jax.lax.fori_loop(0, chunk, body, (h0, y0))
+    state[...] = h
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(j == n_chunks - 1)
+    def _():
+        s_out[0] = h.astype(s_out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(
+    x: jax.Array,  # (BH, T, P)
+    b: jax.Array,  # (BH, T, N)
+    c: jax.Array,  # (BH, T, N)
+    dt: jax.Array,  # (BH, T) positive
+    a: jax.Array,  # (BH,) negative scalars
+    d: jax.Array,  # (BH,) skip weights
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+):
+    """Returns (y (BH, T, P), final state (BH, P, N) f32)."""
+    BH, T, P = x.shape
+    N = b.shape[-1]
+    ct = min(chunk, T)
+    pad = (-T) % ct
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))  # dt=0 -> decay 1, no update
+    Tp = T + pad
+    n_chunks = Tp // ct
+    kern = functools.partial(_ssm_kernel, chunk=ct, n_chunks=n_chunks)
+    y, s = pl.pallas_call(
+        kern,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, ct, P), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, ct, N), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, ct, N), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, ct), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ct, P), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, P, N), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Tp, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, b, c, dt, a[:, None], d[:, None])
+    return y[:, :T], s

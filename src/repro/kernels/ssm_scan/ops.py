@@ -1,0 +1,26 @@
+"""Public op: model-zoo layout wrapper for the Mamba2 scan kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.ssm_scan.kernel import ssm_scan
+
+
+def selective_scan(x, b, c, dt, a, d, *, chunk: int = 128, interpret=None):
+    """x: (B,T,H,P); b,c: (B,T,N); dt: (B,T,H); a,d: (H,).
+    Returns (y (B,T,H,P), state (B,H,P,N))."""
+    interp = default_interpret() if interpret is None else interpret
+    B, T, H, P = x.shape
+    N = b.shape[-1]
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, T, P)
+    bf = jnp.broadcast_to(b[:, None], (B, H, T, N)).reshape(B * H, T, N)
+    cf = jnp.broadcast_to(c[:, None], (B, H, T, N)).reshape(B * H, T, N)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, T)
+    af = jnp.broadcast_to(a[None], (B, H)).reshape(B * H)
+    df = jnp.broadcast_to(d[None], (B, H)).reshape(B * H)
+    y, s = ssm_scan(xf, bf, cf, dtf, af, df, chunk=chunk, interpret=interp)
+    return (
+        y.reshape(B, H, T, P).transpose(0, 2, 1, 3),
+        s.reshape(B, H, P, N),
+    )

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the Mamba2 selective-state scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x, b, c, dt, a, d, state0=None):
+    """x: (BH,T,P); b,c: (BH,T,N); dt: (BH,T); a,d: (BH,).
+    Returns (y (BH,T,P), final state (BH,P,N))."""
+    BH, T, P = x.shape
+    N = b.shape[-1]
+    h0 = jnp.zeros((BH, P, N), jnp.float32) if state0 is None else state0
+
+    def step(h, xs):
+        xt, bt, ct, dtt = xs  # (BH,P), (BH,N), (BH,N), (BH,)
+        decay = jnp.exp(dtt * a)  # (BH,)
+        upd = (dtt[:, None] * xt)[..., None] * bt[:, None, :]
+        h = decay[:, None, None] * h + upd
+        y = jnp.einsum("bpn,bn->bp", h, ct) + d[:, None] * xt
+        return h, y
+
+    xs = (
+        x.transpose(1, 0, 2).astype(jnp.float32),
+        b.transpose(1, 0, 2).astype(jnp.float32),
+        c.transpose(1, 0, 2).astype(jnp.float32),
+        dt.transpose(1, 0).astype(jnp.float32),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype), h

@@ -1,0 +1,471 @@
+"""Post-SPMD HLO analysis: collective bytes, matmul FLOPs, memory traffic,
+and the three-term roofline.
+
+Input is ``compiled.as_text()`` — the *partitioned* HLO, so all shapes are
+per-device and collectives are materialized ops.  Because layers are
+scan-stacked, ops inside a while body execute ``trip_count`` times but appear
+once in the text; the analyzer builds the computation call graph (while
+bodies, fusions, calls), extracts each while's trip count from its condition
+computation, and multiplies through.
+
+Reported roofline terms are **seconds per step per chip**:
+
+    compute    = dot_flops / peak_flops          (MXU term)
+    memory     = traffic_bytes / hbm_bw          (HBM term)
+    collective = collective_bytes / ici_bw       (ICI term)
+
+dot_flops counts dot/convolution ops only (elementwise is never the TPU
+bottleneck at these shapes); traffic_bytes approximates HBM traffic as the
+sum of op output bytes (written once, read ~once downstream) plus entry
+parameter bytes; collective_bytes sums the output bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import HardwareModel, TPU_V5E
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_START = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(.*\))?\s*->.*\{")
+_OP_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_CALLEE_RE = re.compile(
+    r"(?:body|condition|to_apply|calls|branch_computations)=\{?%?([\w\.\-]+)"
+)
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    out_type: str
+    rest: str  # operand list + attrs (raw)
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: List[Op] = field(default_factory=list)
+    callees: List[Tuple[str, str]] = field(default_factory=list)  # (kind, name)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        m = _COMP_START.match(line)
+        if m:
+            cur = Computation(name=m.group(2), is_entry=bool(m.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            name, out_type, kind, rest = om.groups()
+            op = Op(name=name, kind=kind, out_type=out_type, rest=rest)
+            cur.ops.append(op)
+            for cm in _CALLEE_RE.finditer(line):
+                cur.callees.append((kind, cm.group(1)))
+    return comps
+
+
+def while_trip_count(cond: Computation) -> int:
+    """Extract the trip count from a while condition computation: the
+    integer constant compared against the induction variable."""
+    consts = []
+    for op in cond.ops:
+        if op.kind == "constant" and op.out_type.strip().startswith("s32"):
+            cm = re.search(r"^(\-?\d+)\)", op.rest)
+            if cm:
+                consts.append(int(cm.group(1)))
+    # conditions are tiny: the loop bound is the (max) integer constant the
+    # induction variable is compared against (the compare itself may be
+    # wrapped in a fusion, so we do not require seeing direction=LT here)
+    nonneg = [c for c in consts if c >= 0]
+    return max(nonneg) if nonneg else 1
+
+
+@dataclass
+class HLOSummary:
+    dot_flops: float
+    traffic_bytes: float
+    collective_bytes: float
+    collectives: Dict[str, float]  # kind -> bytes (multiplied)
+    n_while: int
+    trip_counts: List[int]
+    param_bytes: float
+    output_bytes: float
+
+
+def _operand_names(rest: str) -> List[str]:
+    """Operand %names from the text following 'op(' up to the matching ')'."""
+    depth = 1
+    end = 0
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    args = rest[:end]
+    return re.findall(r"%([\w\.\-]+)", args)
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    """2 * prod(result) * prod(contracting dims of lhs).
+
+    Scheduled HLO does not inline operand types, so lhs shape is resolved
+    via the computation's symbol table; falls back to inline shapes."""
+    out_elems = shape_elems(op.out_type)
+    lhs_type = None
+    names = _operand_names(op.rest)
+    if names and names[0] in shapes:
+        lhs_type = shapes[names[0]]
+    if lhs_type is None:
+        m = _SHAPE_RE.search(op.rest)
+        lhs_type = m.group(0) if m else None
+    if lhs_type is None:
+        return 0.0
+    m = _SHAPE_RE.search(lhs_type)
+    if m is None:
+        return 0.0
+    lhs_dims = [int(d) for d in m.group(2).split(",") if d]
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    k = 1
+    if cm and cm.group(1):
+        for idx in cm.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: Op) -> float:
+    # rough: 2 * out_elems * (kernel_elems_per_output).  Parse rhs (filter).
+    out_elems = shape_elems(op.out_type)
+    shapes = _SHAPE_RE.findall(op.rest)
+    if len(shapes) < 2:
+        return 0.0
+    filt = shapes[1]
+    k = 1
+    for d in filt[1].split(","):
+        if d:
+            k *= int(d)
+    # divide by output features approximation is skipped; convs are
+    # negligible in this zoo (zamba2 depthwise conv only)
+    return 2.0 * out_elems * max(k, 1) ** 0.5
+
+
+def summarize(text: str) -> HLOSummary:
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # map computation -> multiplier via BFS through the call graph
+    mult: Dict[str, float] = {entry.name: 1.0}
+    order = [entry.name]
+    seen = {entry.name}
+    trip_counts: List[int] = []
+    n_while = 0
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        # group callees by op line: while ops carry (condition, body)
+        for op in comp.ops:
+            callees = _CALLEE_RE.findall(
+                f"{op.kind}({op.rest}"
+            )
+            if op.kind == "while":
+                n_while += 1
+                cond_name = None
+                body_name = None
+                cm = re.search(r"condition=\{?%?([\w\.\-]+)", op.rest)
+                bm = re.search(r"body=\{?%?([\w\.\-]+)", op.rest)
+                if cm:
+                    cond_name = cm.group(1)
+                if bm:
+                    body_name = bm.group(1)
+                tc = 1
+                if cond_name and cond_name in comps:
+                    tc = while_trip_count(comps[cond_name])
+                trip_counts.append(tc)
+                for nm, f in ((body_name, m * tc), (cond_name, m * tc)):
+                    if nm:
+                        mult[nm] = max(mult.get(nm, 0.0), f)
+                        if nm not in seen:
+                            seen.add(nm)
+                            order.append(nm)
+            else:
+                for nm in callees:
+                    mult[nm] = max(mult.get(nm, 0.0), m)
+                    if nm not in seen:
+                        seen.add(nm)
+                        order.append(nm)
+
+    dot_flops = 0.0
+    traffic = 0.0
+    coll_bytes = 0.0
+    coll_by_kind: Dict[str, float] = {}
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue  # unreachable
+        shapes = {op.name: op.out_type for op in comp.ops}
+        for op in comp.ops:
+            ob = shape_bytes(op.out_type)
+            if op.kind == "dot":
+                dot_flops += m * _dot_flops(op, shapes)
+                traffic += m * ob
+            elif op.kind in ("convolution",):
+                dot_flops += m * _conv_flops(op)
+                traffic += m * ob
+            elif op.kind.startswith(COLLECTIVES):
+                base = op.kind
+                for c in COLLECTIVES:
+                    if op.kind.startswith(c):
+                        base = c
+                        break
+                if op.kind.endswith("-done"):
+                    continue  # counted at -start
+                coll_bytes += m * ob
+                coll_by_kind[base] = coll_by_kind.get(base, 0.0) + m * ob
+                traffic += m * ob
+            elif op.kind in ("fusion", "copy", "scatter", "gather",
+                             "dynamic-update-slice", "dynamic-slice",
+                             "custom-call", "sort", "reduce", "transpose",
+                             "reshape", "broadcast", "concatenate", "select",
+                             "convert", "iota", "pad", "slice"):
+                traffic += m * ob
+
+    # entry parameter/output bytes (weights in, new weights out)
+    param_bytes = 0.0
+    out_bytes = 0.0
+    for op in entry.ops:
+        if op.kind == "parameter":
+            param_bytes += shape_bytes(op.out_type)
+    root = entry.ops[-1] if entry.ops else None
+    if root is not None:
+        out_bytes = shape_bytes(root.out_type)
+    traffic += param_bytes + out_bytes
+
+    return HLOSummary(
+        dot_flops=dot_flops,
+        traffic_bytes=traffic,
+        collective_bytes=coll_bytes,
+        collectives=coll_by_kind,
+        n_while=n_while,
+        trip_counts=trip_counts,
+        param_bytes=param_bytes,
+        output_bytes=out_bytes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Roofline
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_per_chip: float
+    useful_ratio: float  # MODEL_FLOPS / (HLO flops * chips)
+    collectives: Dict[str, float]
+
+    def as_dict(self):
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_chip": self.hlo_flops_per_chip,
+            "useful_ratio": self.useful_ratio,
+            "collectives": self.collectives,
+        }
+
+
+def roofline(summary: HLOSummary, n_chips: int, model_flops: float,
+             hw: HardwareModel = TPU_V5E) -> Roofline:
+    compute_s = summary.dot_flops / hw.peak_flops_bf16
+    memory_s = summary.traffic_bytes / hw.hbm_bw
+    collective_s = summary.collective_bytes / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    total_hlo = summary.dot_flops * n_chips
+    return Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        hlo_flops_per_chip=summary.dot_flops,
+        useful_ratio=model_flops / total_hlo if total_hlo > 0 else 0.0,
+        collectives=summary.collectives,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+
+def count_params_analytic(cfg) -> Tuple[float, float]:
+    """(total_params, active_params) — active differs for MoE."""
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab_size
+    qd, kvd = cfg.q_dim, cfg.kv_dim
+    attn = d * qd + 2 * d * kvd + qd * d
+    gated = 3 if cfg.mlp_variant in ("swiglu", "geglu") else 2
+    total = V * d * (1 if cfg.tie_embeddings else 2)
+    active = total
+    if cfg.family == "ssm":  # rwkv6: 5 square proj + channel mix
+        per_layer = 5 * d * d + gated_ffn_params(cfg, d)
+        total += L * per_layer
+        active = total
+        return float(total), float(active)
+    for li in range(L):
+        is_moe = cfg.moe is not None and li >= (cfg.moe.first_dense_layers
+                                                if cfg.moe else 0)
+        if cfg.family == "hybrid":
+            # mamba2 backbone layer
+            from repro.models import ssm as ssm_mod
+
+            d_inner, H, xbc, d_in_proj = ssm_mod.dims(cfg)
+            per = d * d_in_proj + d_inner * d
+            total += per
+            active += per
+            continue
+        if is_moe:
+            e = cfg.moe
+            expert = gated * d * e.d_ff_expert
+            total += attn + e.n_experts * expert + d * e.n_experts
+            total += e.n_shared_experts * gated * d * e.d_ff_expert
+            active += attn + e.top_k * expert + d * e.n_experts
+            active += e.n_shared_experts * gated * d * e.d_ff_expert
+        else:
+            ffn = gated_ffn_params(cfg, d)
+            total += attn + ffn
+            active += attn + ffn
+    if cfg.family == "hybrid":
+        # one shared transformer block + down-proj
+        shared = attn + gated_ffn_params(cfg, d) + 2 * d * d
+        total += shared
+        active += shared
+    if cfg.family == "audio" and cfg.encdec:
+        enc = cfg.encdec.n_encoder_layers * (attn + gated_ffn_params(cfg, d))
+        cross = L * (d * qd + 2 * d * kvd + qd * d)
+        total += enc + cross
+        active += enc + cross
+    return float(total), float(active)
+
+
+def gated_ffn_params(cfg, d) -> int:
+    gated = 3 if cfg.mlp_variant in ("swiglu", "geglu") else 2
+    return gated * d * cfg.d_ff
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N_active*D for train (fwd+bwd), 2*N_active*D for
+    inference, plus the attention score/value matmuls (which dominate long
+    decode and are not captured by the parametric term).  Global FLOPs."""
+    total, active = count_params_analytic(cfg)
+    B = shape.global_batch
+    if shape.kind == "train":
+        tokens, mult = B * shape.seq_len, 6.0
+        sq, skv = shape.seq_len, shape.seq_len
+    elif shape.kind == "prefill":
+        tokens, mult = B * shape.seq_len, 2.0
+        sq, skv = shape.seq_len, shape.seq_len
+    else:
+        tokens, mult = B, 2.0
+        sq, skv = 1, shape.seq_len
+    if shape.kind == "decode" and cfg.family == "audio" and cfg.encdec:
+        # the encoder does not run at decode (cross K/V live in the cache)
+        d = cfg.d_model
+        enc_params = cfg.encdec.n_encoder_layers * (
+            cfg.d_model * cfg.q_dim + 2 * cfg.d_model * cfg.kv_dim
+            + cfg.q_dim * cfg.d_model + gated_ffn_params(cfg, d)
+        )
+        active = max(active - enc_params, 1.0)
+    flops = mult * active * tokens
+
+    # attention: per layer 4*B*Sq*Skv_eff*q_dim fwd (QK^T + PV), x3 train
+    if cfg.attention != "none" and cfg.family != "lstm":
+        if cfg.attention == "swa":
+            skv_eff = min(skv, cfg.window_size)
+        else:
+            skv_eff = skv
+        if sq > 1 and cfg.attention != "swa":
+            skv_eff = skv_eff / 2  # causal halves the average span
+        n_attn = cfg.n_layers
+        if cfg.family == "hybrid" and cfg.hybrid is not None:
+            n_attn = cfg.n_layers // cfg.hybrid.attn_every
+        if cfg.family == "audio" and cfg.encdec is not None:
+            # decoder self + cross + encoder self
+            enc = cfg.encdec
+            flops += (4.0 * B * sq * enc.encoder_len * cfg.q_dim
+                      * (3.0 if shape.kind == "train" else 1.0)) * cfg.n_layers
+            if shape.kind in ("train",):
+                flops += (12.0 * B * enc.encoder_len * enc.encoder_len / 2
+                          * cfg.q_dim) * enc.n_encoder_layers
+        a_mult = 3.0 if shape.kind == "train" else 1.0
+        flops += 4.0 * a_mult * B * sq * skv_eff * cfg.q_dim * n_attn
+    return flops

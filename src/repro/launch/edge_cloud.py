@@ -1,0 +1,72 @@
+"""Edge-cloud deployment launcher: run the discrete-event runtime for a
+chosen deployment modality with measured-module calibration, optionally with
+int8-quantized model sync (the TFLite-analog edge path).
+
+    PYTHONPATH=src python -m repro.launch.edge_cloud --deployment integrated
+    PYTHONPATH=src python -m repro.launch.edge_cloud --deployment all \
+        --windows 50 --quantized --fast
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--deployment",
+                   choices=["edge", "cloud", "integrated", "all"],
+                   default="all")
+    p.add_argument("--windows", type=int, default=25)
+    p.add_argument("--static", action="store_true",
+                   help="static 5:5 weighting instead of dynamic")
+    p.add_argument("--quantized", action="store_true",
+                   help="int8 model sync (4x smaller transfers)")
+    p.add_argument("--fast", action="store_true")
+    args = p.parse_args()
+
+    sys.path.insert(0, ".")
+    from benchmarks.calibrate import calibrate
+    from repro.runtime import (
+        EdgeCloudSimulation,
+        cloud_centric,
+        edge_centric,
+        edge_cloud_integrated,
+        paper_topology,
+    )
+
+    cal = calibrate(fast=args.fast)
+    cost = cal.cost
+    if args.quantized:
+        import dataclasses
+
+        cost = dataclasses.replace(cost, model_nbytes=cost.model_nbytes / 4
+                                   + 256)  # int8 weights + f32 scales
+
+    names = {
+        "edge": [edge_centric],
+        "cloud": [cloud_centric],
+        "integrated": [edge_cloud_integrated],
+        "all": [edge_centric, cloud_centric, edge_cloud_integrated],
+    }[args.deployment]
+
+    print(f"calibration: {cal.details}")
+    for factory in names:
+        dep = factory()
+        sim = EdgeCloudSimulation(dep, paper_topology(), cost,
+                                  dynamic_weighting=not args.static)
+        res = sim.run(args.windows)
+        print(f"\n[{dep.name}] {args.windows} windows, "
+              f"{'static' if args.static else 'dynamic'} weighting"
+              f"{', int8 sync' if args.quantized else ''}")
+        for m, row in res.table3().items():
+            print(f"  {m:<18} comp={row['computation']:>8.3f}s "
+                  f"comm={row['communication']:>8.3f}s "
+                  f"total={row['total']:>8.3f}s")
+        if res.failures:
+            print(f"  !! {len(res.failures)} failures "
+                  f"(first: {res.failures[0]})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""Step builders: the jit-able functions the launcher runs and the dry-run
+lowers, together with fully-sharded ShapeDtypeStruct input specs.
+
+``build_step(cfg, shape, mesh)`` returns (fn, specs) such that
+
+    with use_mesh_rules(mesh, rules):
+        lowered = jax.jit(fn).lower(**specs)
+
+compiles the exact production computation: train_step for train shapes
+(fwd + bwd + AdamW update, FSDP/TP sharded), prefill_step for prefill
+shapes, decode_step (one new token against a seq_len KV cache) for decode
+shapes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed.sharding import (
+    AxisRules,
+    logical_to_spec,
+    param_axes_for,
+    _path_str,
+)
+from repro.models.model import get_model, input_specs
+from repro.training.optimizer import adamw
+from repro.training.train_loop import make_train_step
+
+# logical axes of cache leaves, by leaf name (trailing dims; leading
+# stacked-layer dims padded with "stack")
+CACHE_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "k": ("batch", "seq", "kv_heads", None),
+    "v": ("batch", "seq", "kv_heads", None),
+    "ck": ("batch", "seq", "kv_heads", None),
+    "cv": ("batch", "seq", "kv_heads", None),
+    "kv_pos": ("batch", None),
+    "mem_pos": ("batch", None),
+    "state": ("batch", "heads", None, None),
+    "shift_tm": ("batch", "embed"),
+    "shift_cm": ("batch", "embed"),
+    "conv": ("batch", None, "tp"),
+    "h": ("batch", "heads", None, None),
+}
+
+BATCH_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "tokens": ("batch", None),
+    "targets": ("batch", None),
+    "mask": ("batch", None),
+    "token": ("batch", None),
+    "pos": ("batch",),
+    "prefix_embed": ("batch", None, None),
+    "x": ("batch", None, None),
+    "y": ("batch", None),
+}
+
+
+def _with_sharding(sds_tree, axes_lookup, mesh: Mesh, rules: AxisRules):
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+
+    def one(path, s):
+        name = _path_str(path).split("/")[-1]
+        axes = axes_lookup(name, path, s)
+        spec = logical_to_spec(axes, s.shape, mesh, rules)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(one, sds_tree)
+
+
+def shard_batch_specs(sds_tree, mesh, rules):
+    def lookup(name, path, s):
+        axes = BATCH_AXES.get(name, ())
+        return tuple(axes) + (None,) * (len(s.shape) - len(axes))
+
+    return _with_sharding(sds_tree, lookup, mesh, rules)
+
+
+def shard_cache_specs(sds_tree, mesh, rules):
+    def lookup(name, path, s):
+        axes = CACHE_AXES.get(name, (None,) * len(s.shape))
+        n_lead = len(s.shape) - len(axes)
+        return ("stack",) * n_lead + tuple(axes)
+
+    return _with_sharding(sds_tree, lookup, mesh, rules)
+
+
+def shard_param_specs(sds_tree, mesh, rules):
+    def lookup(name, path, s):
+        return param_axes_for(_path_str(path), len(s.shape))
+
+    return _with_sharding(sds_tree, lookup, mesh, rules)
+
+
+def param_opt_specs(cfg: ModelConfig, mesh: Mesh, rules: AxisRules,
+                    key_seed: int = 0):
+    """ShapeDtypeStruct trees (no allocation) for params and AdamW state."""
+    model = get_model(cfg)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(key_seed))
+    params_sds = shard_param_specs(params_sds, mesh, rules)
+    opt = adamw(1e-4, moment_dtype=cfg.opt_moment_dtype)
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    # moments share the params' sharding; step scalar replicated
+    mu = shard_param_specs(opt_sds.mu, mesh, rules)
+    nu = shard_param_specs(opt_sds.nu, mesh, rules)
+    step = jax.ShapeDtypeStruct(
+        (), jnp.int32, sharding=NamedSharding(mesh, P())
+    )
+    opt_sds = type(opt_sds)(step=step, mu=mu, nu=nu)
+    return params_sds, opt_sds, opt
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+               rules: Optional[AxisRules] = None):
+    """Returns (fn, kwargs_specs).  fn signature depends on shape.kind."""
+    rules = rules or AxisRules()
+    model = get_model(cfg)
+    raw = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        params_sds, opt_sds, opt = param_opt_specs(cfg, mesh, rules)
+        step_fn = make_train_step(model, opt)
+        specs = {
+            "params": params_sds,
+            "opt_state": opt_sds,
+            "batch": shard_batch_specs(raw["batch"], mesh, rules),
+        }
+
+        def fn(params, opt_state, batch):
+            return step_fn(params, opt_state, batch)
+
+        return fn, specs
+
+    params_sds, _, _ = param_opt_specs(cfg, mesh, rules)
+    if shape.kind == "prefill":
+        specs = {
+            "params": params_sds,
+            "batch": shard_batch_specs(raw["batch"], mesh, rules),
+        }
+
+        def fn(params, batch):
+            return model.prefill(params, batch, shape.seq_len)
+
+        return fn, specs
+
+    if shape.kind == "decode":
+        specs = {
+            "params": params_sds,
+            "batch": shard_batch_specs(raw["batch"], mesh, rules),
+            "cache": shard_cache_specs(raw["cache"], mesh, rules),
+        }
+
+        def fn(params, batch, cache):
+            return model.decode_step(params, batch, cache)
+
+        return fn, specs
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,128 @@
+"""Chunked online-softmax attention (XLA path).
+
+This is the memory-safe attention used for lowering/compiling everywhere:
+it never materializes the (Sq, Sk) score matrix, instead scanning KV chunks
+with flash-style running (max, sum, acc) statistics in f32.  The Pallas
+flash-attention kernel (repro.kernels.flash_attention) is the TPU-optimized
+version of exactly this computation and is validated against the same oracle.
+
+Positions are explicit: ``kv_pos`` carries -1 for invalid (unwritten cache)
+slots, which uniformly handles causal masks, sliding windows, ring-buffer
+caches and padded chunks.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pad_to_multiple(x: jax.Array, mult: int, axis: int, pad_value=0):
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=pad_value)
+
+
+def attend(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Sk, Hkv, D)
+    v: jax.Array,  # (B, Sk, Hkv, D)
+    q_pos: jax.Array,  # (B, Sq) int32
+    kv_pos: jax.Array,  # (B, Sk) int32; -1 marks invalid slots
+    *,
+    causal: bool = True,
+    window: int = 0,  # >0 -> sliding window of this width
+    chunk: int = 1024,
+    scale: Optional[float] = None,
+    p_dtype: Optional[jnp.dtype] = None,  # prob dtype for the PV matmul
+) -> jax.Array:
+    """Grouped-query chunked attention; returns (B, Sq, Hq, D) in q.dtype."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    scale = D**-0.5 if scale is None else scale
+
+    qg = q.reshape(B, Sq, Hkv, G, D)
+
+    chunk = min(chunk, Sk)
+    kp = _pad_to_multiple(k, chunk, axis=1)
+    vp = _pad_to_multiple(v, chunk, axis=1)
+    pp = _pad_to_multiple(kv_pos, chunk, axis=1, pad_value=-1)
+    n_chunks = kp.shape[1] // chunk
+
+    # (n_chunks, B, C, Hkv, D)
+    kc = kp.reshape(B, n_chunks, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(B, n_chunks, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    pc = pp.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kk, vv, pos = xs
+        # scores: (B, Sq, Hkv, G, C) in f32
+        s = jnp.einsum(
+            "bqhgd,bchd->bqhgc", qg.astype(jnp.float32), kk.astype(jnp.float32)
+        ) * scale
+        valid = pos[:, None, :] >= 0  # (B, 1, C)
+        mask = valid
+        if causal:
+            mask = mask & (pos[:, None, :] <= q_pos[:, :, None])
+        if window > 0:
+            mask = mask & ((q_pos[:, :, None] - pos[:, None, :]) < window)
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows: keep m finite for exp
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[:, :, None, None, :], p, 0.0)
+        corr = jnp.exp(jnp.where(m <= NEG_INF / 2, NEG_INF, m) - m_safe)
+        corr = jnp.where(m <= NEG_INF / 2, 0.0, corr)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        if p_dtype is not None:
+            # perf: halve P-matrix traffic; accumulate in f32 regardless
+            pv = jnp.einsum(
+                "bqhgc,bchd->bqhgd", p.astype(p_dtype), vv.astype(p_dtype),
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            pv = jnp.einsum("bqhgc,bchd->bqhgd", p, vv.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def attend_full_ref(
+    q, k, v, q_pos, kv_pos, *, causal=True, window=0, scale=None
+) -> jax.Array:
+    """O(Sq*Sk) reference used by tests (small shapes only)."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = D**-0.5 if scale is None else scale
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k.astype(jnp.float32)) * scale
+    mask = kv_pos[:, None, :] >= 0
+    if causal:
+        mask = mask & (kv_pos[:, None, :] <= q_pos[:, :, None])
+    if window > 0:
+        mask = mask & ((q_pos[:, :, None] - kv_pos[:, None, :]) < window)
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[:, :, None, None, :], p, 0.0)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)

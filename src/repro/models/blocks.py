@@ -1,0 +1,267 @@
+"""Shared transformer building blocks: GQA attention (with KV caches and
+sliding windows), MLP variants, embeddings and the token loss.
+
+All block params are created either per-layer-stacked (leading L dim, consumed
+by ``lax.scan`` over layers) or flat (shared blocks / encoders).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import nn
+from repro.models.attention import attend
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, path: str, cfg: ModelConfig, n_stack: Optional[int] = None) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+
+    def mk(name, i, o):
+        if n_stack is None:
+            return nn.dense_init(key, f"{path}/{name}", i, o, dt)
+        return nn.stacked_dense_init(key, f"{path}/{name}", n_stack, i, o, dt)
+
+    p = {
+        "wq": mk("wq", d, qd),
+        "wk": mk("wk", d, kvd),
+        "wv": mk("wv", d, kvd),
+        "wo": mk("wo", qd, d),
+    }
+    if cfg.qkv_bias:
+        shape = (qd,) if n_stack is None else (n_stack, qd)
+        kshape = (kvd,) if n_stack is None else (n_stack, kvd)
+        p["bq"] = nn.zeros(shape, dt)
+        p["bk"] = nn.zeros(kshape, dt)
+        p["bv"] = nn.zeros(kshape, dt)
+    return p
+
+
+def attn_qkv(
+    cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array, rope: bool = True
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Project + rope.  x: (B,S,d) -> q (B,S,Hq,D), k/v (B,S,Hkv,D)."""
+    B, S, _ = x.shape
+    D = cfg.resolved_head_dim
+    q = nn.dense(x, p["wq"], p.get("bq")).reshape(B, S, cfg.n_heads, D)
+    k = nn.dense(x, p["wk"], p.get("bk")).reshape(B, S, cfg.n_kv_heads, D)
+    v = nn.dense(x, p["wv"], p.get("bv")).reshape(B, S, cfg.n_kv_heads, D)
+    if rope:
+        q = nn.apply_rope(q, positions, cfg.rope_theta)
+        k = nn.apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def self_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,  # (B, S)
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    """Full-sequence self attention (train / prefill)."""
+    q, k, v = attn_qkv(cfg, p, x, positions)
+    window = cfg.window_size if cfg.attention == "swa" else 0
+    p_dtype = (jnp.dtype(cfg.attn_p_dtype)
+               if cfg.attn_p_dtype != "float32" else None)
+
+    def att(qq, pos_q):
+        return attend(
+            qq, k, v, pos_q, positions, causal=causal, window=window,
+            chunk=cfg.attn_chunk, p_dtype=p_dtype,
+        )
+
+    qc = cfg.attn_q_chunk
+    S = q.shape[1]
+    if qc and S > qc and S % qc == 0:
+        # block queries too: bounds the live (bq, Sk) score working set so
+        # long-sequence training fits HBM (see EXPERIMENTS.md §Perf)
+        nq = S // qc
+        qs = q.reshape(q.shape[0], nq, qc, *q.shape[2:]).transpose(1, 0, 2, 3, 4)
+        ps = positions.reshape(positions.shape[0], nq, qc).transpose(1, 0, 2)
+        o = jax.lax.map(lambda ab: att(ab[0], ab[1]), (qs, ps))
+        o = o.transpose(1, 0, 2, 3, 4).reshape(*q.shape)
+    else:
+        o = att(q, positions)
+    o = o.reshape(*x.shape[:2], cfg.q_dim)
+    return shard(nn.dense(o, p["wo"]), "batch", "seq", "embed")
+
+
+def cache_slot(cfg: ModelConfig, pos: jax.Array, Smax: int) -> jax.Array:
+    """Write slot for the current position ((B,) int32)."""
+    if cfg.attention == "swa":
+        return pos % Smax  # ring buffer
+    return jnp.minimum(pos, Smax - 1)
+
+
+def update_kv_pos(kv_pos: jax.Array, pos: jax.Array, slot: jax.Array) -> jax.Array:
+    """Record the absolute position written into each cache slot (shared
+    across layers, so this is done once per decode step)."""
+    return jax.vmap(
+        lambda buf, val, i: jax.lax.dynamic_update_slice(buf, val, (i,))
+    )(kv_pos, pos[:, None], slot)
+
+
+def cached_attention_step(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # (B, 1, d)
+    pos: jax.Array,  # (B,) current absolute position
+    slot: jax.Array,  # (B,) precomputed write slot
+    kv_pos: jax.Array,  # (B, Smax) already updated for this step
+    k_cache: jax.Array,  # (B, Smax, Hkv, D)
+    v_cache: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step against a (possibly ring-buffer) KV cache."""
+    B = x.shape[0]
+    q, k_new, v_new = attn_qkv(cfg, p, x, pos[:, None])
+
+    def write(buf, val, i):
+        return jax.lax.dynamic_update_slice(buf, val, (i, 0, 0))
+
+    k_cache = jax.vmap(write)(k_cache, k_new, slot)
+    v_cache = jax.vmap(write)(v_cache, v_new, slot)
+
+    window = cfg.window_size if cfg.attention == "swa" else 0
+    o = attend(
+        q,
+        k_cache,
+        v_cache,
+        pos[:, None],
+        kv_pos,
+        causal=True,
+        window=window,
+        chunk=cfg.attn_chunk,
+    )
+    o = o.reshape(B, 1, cfg.q_dim)
+    out = nn.dense(o, p["wo"])
+    return out, k_cache, v_cache
+
+
+def cross_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,  # (B, S, d)
+    mem_k: jax.Array,  # (B, M, Hkv, D) precomputed
+    mem_v: jax.Array,
+    mem_pos: jax.Array,  # (B, M)
+) -> jax.Array:
+    B, S, _ = x.shape
+    D = cfg.resolved_head_dim
+    q = nn.dense(x, p["wq"], p.get("bq")).reshape(B, S, cfg.n_heads, D)
+    q_pos = jnp.zeros((B, S), jnp.int32)  # non-causal: positions unused
+    o = attend(
+        q, mem_k, mem_v, q_pos, mem_pos, causal=False, window=0, chunk=cfg.attn_chunk
+    )
+    o = o.reshape(B, S, cfg.q_dim)
+    return nn.dense(o, p["wo"])
+
+
+def project_memory(cfg: ModelConfig, p: Params, mem: jax.Array):
+    """K/V projection of encoder memory for cross attention."""
+    B, M, _ = mem.shape
+    D = cfg.resolved_head_dim
+    k = nn.dense(mem, p["wk"], p.get("bk")).reshape(B, M, cfg.n_kv_heads, D)
+    v = nn.dense(mem, p["wv"], p.get("bv")).reshape(B, M, cfg.n_kv_heads, D)
+    return k, v
+
+
+def init_attn_cache(cfg: ModelConfig, n_layers: int, batch: int, max_len: int):
+    """Stacked (L, B, Smax, Hkv, D) KV cache; kv_pos -1 = unwritten."""
+    Smax = min(max_len, cfg.window_size) if cfg.attention == "swa" else max_len
+    D = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jnp.zeros((n_layers, batch, Smax, cfg.n_kv_heads, D), dt),
+        "v": jnp.zeros((n_layers, batch, Smax, cfg.n_kv_heads, D), dt),
+        "kv_pos": jnp.full((batch, Smax), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, path: str, cfg: ModelConfig, n_stack: Optional[int] = None,
+             d_ff: Optional[int] = None) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+
+    def mk(name, i, o):
+        if n_stack is None:
+            return nn.dense_init(key, f"{path}/{name}", i, o, dt)
+        return nn.stacked_dense_init(key, f"{path}/{name}", n_stack, i, o, dt)
+
+    p = {"w_in": mk("w_in", d, f), "w_out": mk("w_out", f, d)}
+    if nn.is_gated(cfg.mlp_variant):
+        p["w_gate"] = mk("w_gate", d, f)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    h = nn.dense(x, p["w_in"])
+    gate = nn.dense(x, p["w_gate"]) if "w_gate" in p else None
+    h = shard(nn.mlp_act(h, cfg.mlp_variant, gate), "batch", "seq", "ffn")
+    return shard(nn.dense(h, p["w_out"]), "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / loss
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {"tok_embed": nn.embed_init(key, "tok_embed", cfg.vocab_size, cfg.d_model, dt)}
+    if not cfg.tie_embeddings:
+        p["out_head"] = nn.dense_init(
+            key, "out_head", cfg.d_model, cfg.vocab_size, dt
+        )
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p: Params, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(p["tok_embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.tie_embeddings:
+        x = x * (cfg.d_model**0.5)  # gemma-style scaling with tied embeddings
+    return shard(x, "batch", "seq", "embed")
+
+
+def logits_fn(cfg: ModelConfig, p: Params, h: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = p["tok_embed"].astype(h.dtype)
+        logits = jnp.einsum("...d,vd->...v", h, w)
+    else:
+        logits = nn.dense(h, p["out_head"])
+    logits = logits.astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def token_xent(logits: jax.Array, targets: jax.Array, mask: Optional[jax.Array] = None):
+    """Mean masked cross entropy; logits f32 (B,S,V), targets (B,S)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

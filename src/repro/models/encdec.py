@@ -1,0 +1,173 @@
+"""Encoder-decoder backbone (SeamlessM4T-medium text decoder + speech
+encoder) [arXiv:2308.11596].
+
+The speech frontend (mel + conv feature extractor) is a stub per the modality
+carve-out: the encoder consumes precomputed frame embeddings
+(batch, frames, embed_dim) provided by ``input_specs``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks, nn
+
+Params = Dict[str, Any]
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    ne = cfg.encdec.n_encoder_layers
+    nd = cfg.n_layers
+    p: Params = {
+        **blocks.init_embed(key, cfg),
+        "final_norm": nn.ones((d,), dt),
+        "proj_in": nn.dense_init(key, "proj_in", cfg.frontend.embed_dim, d, dt),
+        "enc_norm": {"final_norm": nn.ones((d,), dt)},
+        "enc_layers": {
+            "attn_norm": nn.ones((ne, d), dt),
+            "mlp_norm": nn.ones((ne, d), dt),
+            **blocks.init_attn(key, "enc_layers/attn", cfg, n_stack=ne),
+            **blocks.init_mlp(key, "enc_layers/mlp", cfg, n_stack=ne),
+        },
+        "dec_layers": {
+            "attn_norm": nn.ones((nd, d), dt),
+            "cross_norm": nn.ones((nd, d), dt),
+            "mlp_norm": nn.ones((nd, d), dt),
+            "self": blocks.init_attn(key, "dec_layers/self", cfg, n_stack=nd),
+            "cross": blocks.init_attn(key, "dec_layers/cross", cfg, n_stack=nd),
+            **blocks.init_mlp(key, "dec_layers/mlp", cfg, n_stack=nd),
+        },
+    }
+    return p
+
+
+def encode(cfg: ModelConfig, p: Params, prefix_embed: jax.Array) -> jax.Array:
+    """Frame embeddings -> encoder memory (B, M, d)."""
+    x = nn.dense(prefix_embed.astype(jnp.dtype(cfg.dtype)), p["proj_in"])
+    B, M, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(M, dtype=jnp.int32), (B, M))
+
+    def step(carry, lp):
+        xx = carry
+        h = nn.rms_norm(xx, lp["attn_norm"], cfg.norm_eps)
+        xx = xx + blocks.self_attention(cfg, lp, h, positions, causal=False)
+        h = nn.rms_norm(xx, lp["mlp_norm"], cfg.norm_eps)
+        return xx + blocks.apply_mlp(cfg, lp, h), None
+
+    x, _ = jax.lax.scan(step, x, p["enc_layers"])
+    return nn.rms_norm(x, p["enc_norm"]["final_norm"], cfg.norm_eps)
+
+
+def _decoder_seq(cfg, p, tokens, memory, collect_kv: bool = False):
+    B, S = tokens.shape
+    x = blocks.embed_tokens(cfg, p, tokens)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    M = memory.shape[1]
+    mem_pos = jnp.broadcast_to(jnp.arange(M, dtype=jnp.int32), (B, M))
+
+    def step(carry, lp):
+        xx = carry
+        h = nn.rms_norm(xx, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = blocks.attn_qkv(cfg, lp["self"], h, positions)
+        from repro.models.attention import attend
+
+        o = attend(q, k, v, positions, positions, causal=True, chunk=cfg.attn_chunk)
+        xx = xx + nn.dense(o.reshape(B, S, cfg.q_dim), lp["self"]["wo"])
+        h = nn.rms_norm(xx, lp["cross_norm"], cfg.norm_eps)
+        mk, mv = blocks.project_memory(cfg, lp["cross"], memory)
+        xx = xx + blocks.cross_attention(cfg, lp["cross"], h, mk, mv, mem_pos)
+        h = nn.rms_norm(xx, lp["mlp_norm"], cfg.norm_eps)
+        xx = xx + blocks.apply_mlp(cfg, lp, h)
+        ys = (k, v, mk, mv) if collect_kv else None
+        return xx, ys
+
+    x, kv = jax.lax.scan(step, x, p["dec_layers"])
+    x = nn.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    return x, kv
+
+
+def loss_fn(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array]):
+    memory = encode(cfg, p, batch["prefix_embed"])
+    h, _ = _decoder_seq(cfg, p, batch["tokens"], memory)
+    logits = blocks.logits_fn(cfg, p, h)
+    loss = blocks.token_xent(logits, batch["targets"], batch.get("mask"))
+    return loss, {"xent": loss}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    c = blocks.init_attn_cache(cfg, cfg.n_layers, batch, max_len)
+    M = cfg.encdec.encoder_len
+    D = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    c["ck"] = jnp.zeros((cfg.n_layers, batch, M, cfg.n_kv_heads, D), dt)
+    c["cv"] = jnp.zeros_like(c["ck"])
+    c["mem_pos"] = jnp.zeros((batch, M), jnp.int32)
+    return c
+
+
+def prefill(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array],
+            max_len: Optional[int] = None):
+    """Encode audio + run the prompt through the decoder, build all caches."""
+    memory = encode(cfg, p, batch["prefix_embed"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_len = max_len or S
+    h, kv = _decoder_seq(cfg, p, tokens, memory, collect_kv=True)
+    k_all, v_all, ck, cv = kv  # (L,B,S,H,D), cross: (L,B,M,H,D)
+    logits = blocks.logits_fn(cfg, p, h[:, -1:])[:, 0]
+    Smax = max_len
+    take = min(S, Smax)
+    pad = Smax - take
+    kc = jnp.pad(k_all[:, :, S - take:], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v_all[:, :, S - take:], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    kv_pos = jnp.concatenate(
+        [
+            jnp.broadcast_to(jnp.arange(take, dtype=jnp.int32), (B, take)),
+            jnp.full((B, pad), -1, jnp.int32),
+        ],
+        axis=1,
+    )
+    M = memory.shape[1]
+    cache = {
+        "k": kc, "v": vc, "kv_pos": kv_pos,
+        "ck": ck, "cv": cv,
+        "mem_pos": jnp.broadcast_to(jnp.arange(M, dtype=jnp.int32), (B, M)),
+    }
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array],
+                cache: Params):
+    token, pos = batch["token"], batch["pos"]
+    B = token.shape[0]
+    x = blocks.embed_tokens(cfg, p, token)
+    Smax = cache["k"].shape[2]
+    slot = blocks.cache_slot(cfg, pos, Smax)
+    kv_pos = blocks.update_kv_pos(cache["kv_pos"], pos, slot)
+
+    def step(carry, xs):
+        xx = carry
+        lp, kc, vc, ck, cv = xs
+        h = nn.rms_norm(xx, lp["attn_norm"], cfg.norm_eps)
+        o, kc, vc = blocks.cached_attention_step(
+            cfg, lp["self"], h, pos, slot, kv_pos, kc, vc
+        )
+        xx = xx + o
+        h = nn.rms_norm(xx, lp["cross_norm"], cfg.norm_eps)
+        xx = xx + blocks.cross_attention(cfg, lp["cross"], h, ck, cv, cache["mem_pos"])
+        h = nn.rms_norm(xx, lp["mlp_norm"], cfg.norm_eps)
+        xx = xx + blocks.apply_mlp(cfg, lp, h)
+        return xx, (kc, vc)
+
+    x, (k2, v2) = jax.lax.scan(
+        step, x, (p["dec_layers"], cache["k"], cache["v"], cache["ck"], cache["cv"])
+    )
+    x = nn.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    logits = blocks.logits_fn(cfg, p, x)[:, 0]
+    cache = dict(cache, k=k2, v=v2, kv_pos=kv_pos)
+    return logits, cache

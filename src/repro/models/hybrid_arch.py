@@ -1,0 +1,231 @@
+"""Zamba2-style hybrid [arXiv:2411.15242]: Mamba2 backbone with a single
+*shared-weight* transformer block applied every ``attn_every`` layers.
+
+Faithful-to-spirit adaptation (recorded in DESIGN.md): the shared block input
+is concat(hidden, original embedding) projected 2d->d (``shared_down``) and
+the block then runs at d_model width; real Zamba2 runs the shared block at 2d
+with per-application LoRAs, which we omit.
+
+The backbone is grouped into ``n_super`` super-layers of ``attn_every`` Mamba
+blocks each (scan over super-layers, inner scan over the group), plus a
+remainder tail; the shared block closes each super-layer.  SSM state decode is
+O(1) in sequence length apart from the shared block's KV cache -> long_500k
+runs for this arch.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks, nn, ssm
+
+Params = Dict[str, Any]
+
+
+def _split(cfg: ModelConfig) -> Tuple[int, int, int]:
+    k = cfg.hybrid.attn_every
+    n_super = cfg.n_layers // k
+    rem = cfg.n_layers - n_super * k
+    return k, n_super, rem
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    p: Params = {
+        **blocks.init_embed(key, cfg),
+        "final_norm": nn.ones((d,), dt),
+        "mamba": ssm.init_block(key, "mamba", cfg, cfg.n_layers),
+        "shared": {
+            "attn_norm": nn.ones((d,), dt),
+            "mlp_norm": nn.ones((d,), dt),
+            **blocks.init_attn(key, "shared/attn", cfg),
+            **blocks.init_mlp(key, "shared/mlp", cfg),
+            "shared_down": nn.dense_init(key, "shared/shared_down", 2 * d, d, dt),
+        },
+    }
+    return p
+
+
+def _take_group(stack: Params, start: int, n: int) -> Params:
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.dynamic_slice_in_dim(x, start, n, axis=0), stack
+    )
+
+
+def _mamba_group_scan(cfg, group_params, x, conv_states, h_states):
+    """Scan ``n`` mamba blocks.  group_params leaves: (n, ...)."""
+
+    def step(carry, xs):
+        xx = carry
+        lp, cs, hs = xs
+        o, cs2, hs2 = ssm.apply_block(cfg, lp, xx, cs, hs)
+        return xx + o, (cs2, hs2)
+
+    if cfg.remat == "block":
+        step = jax.checkpoint(step, prevent_cse=False)
+    x, (conv2, h2) = jax.lax.scan(step, x, (group_params, conv_states, h_states))
+    return x, conv2, h2
+
+
+def _shared_block_seq(cfg, sp: Params, x, embed0, positions):
+    """Full-sequence shared attention block (train/prefill).  Returns
+    (x, (k, v)) with k/v for the cache."""
+    h_in = jnp.concatenate([x, embed0], axis=-1)
+    h = nn.dense(h_in, sp["shared_down"])
+    hn = nn.rms_norm(h, sp["attn_norm"], cfg.norm_eps)
+    q, k, v = blocks.attn_qkv(cfg, sp, hn, positions)
+    from repro.models.attention import attend
+
+    o = attend(q, k, v, positions, positions, causal=True, chunk=cfg.attn_chunk)
+    o = o.reshape(*h.shape[:2], cfg.q_dim)
+    h = h + nn.dense(o, sp["wo"])
+    hm = nn.rms_norm(h, sp["mlp_norm"], cfg.norm_eps)
+    h = h + blocks.apply_mlp(cfg, sp, hm)
+    return x + h, (k, v)
+
+
+def _shared_block_step(cfg, sp: Params, x, embed0, pos, slot, kv_pos, kc, vc):
+    h_in = jnp.concatenate([x, embed0], axis=-1)
+    h = nn.dense(h_in, sp["shared_down"])
+    hn = nn.rms_norm(h, sp["attn_norm"], cfg.norm_eps)
+    o, kc, vc = blocks.cached_attention_step(cfg, sp, hn, pos, slot, kv_pos, kc, vc)
+    h = h + o
+    hm = nn.rms_norm(h, sp["mlp_norm"], cfg.norm_eps)
+    h = h + blocks.apply_mlp(cfg, sp, hm)
+    return x + h, kc, vc
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    k, n_super, rem = _split(cfg)
+    c = ssm.init_block_cache(cfg, cfg.n_layers, batch)
+    attn_c = blocks.init_attn_cache(cfg, n_super, batch, max_len)
+    return {**c, **attn_c}
+
+
+def forward(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array],
+            cache: Optional[Params] = None, positions=None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = blocks.embed_tokens(cfg, p, tokens)
+    embed0 = x
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    k, n_super, rem = _split(cfg)
+    if cache is None:
+        conv = ssm.init_block_cache(cfg, cfg.n_layers, B)
+        conv_states, h_states = conv["conv"], conv["h"]
+    else:
+        conv_states, h_states = cache["conv"], cache["h"]
+
+    def reshape_group(stack, n0, n1):
+        return jax.tree_util.tree_map(
+            lambda t: t[: n0 * n1].reshape((n0, n1) + t.shape[1:]), stack
+        )
+
+    main = reshape_group(p["mamba"], n_super, k)
+    conv_main = conv_states[: n_super * k].reshape((n_super, k) + conv_states.shape[1:])
+    h_main = h_states[: n_super * k].reshape((n_super, k) + h_states.shape[1:])
+
+    def super_step(carry, xs):
+        xx = carry
+        gp, cs, hs = xs
+        xx, cs2, hs2 = _mamba_group_scan(cfg, gp, xx, cs, hs)
+        xx, (kk, vv) = _shared_block_seq(cfg, p["shared"], xx, embed0, positions)
+        return xx, (cs2, hs2, kk, vv)
+
+    x, (conv2, h2, k_all, v_all) = jax.lax.scan(
+        super_step, x, (main, conv_main, h_main)
+    )
+    conv_new = conv2.reshape((n_super * k,) + conv_states.shape[1:])
+    h_new = h2.reshape((n_super * k,) + h_states.shape[1:])
+    if rem > 0:
+        tail = _take_group(p["mamba"], n_super * k, rem)
+        x, conv_t, h_t = _mamba_group_scan(
+            cfg, tail, x, conv_states[n_super * k :], h_states[n_super * k :]
+        )
+        conv_new = jnp.concatenate([conv_new, conv_t], axis=0)
+        h_new = jnp.concatenate([h_new, h_t], axis=0)
+
+    x = nn.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    return x, (conv_new, h_new, k_all, v_all)
+
+
+def loss_fn(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array]):
+    h, _ = forward(cfg, p, batch)
+    logits = blocks.logits_fn(cfg, p, h)
+    loss = blocks.token_xent(logits, batch["targets"], batch.get("mask"))
+    return loss, {"xent": loss}
+
+
+def prefill(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array],
+            max_len: Optional[int] = None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_len = max_len or S
+    h, (conv, hst, k_all, v_all) = forward(cfg, p, batch)
+    logits = blocks.logits_fn(cfg, p, h[:, -1:])[:, 0]
+    # place shared-block KV into the fixed cache
+    Smax = max_len
+    take = min(S, Smax)
+    pad = Smax - take
+    kc = jnp.pad(k_all[:, :, S - take:], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v_all[:, :, S - take:], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    kv_pos = jnp.concatenate(
+        [
+            jnp.broadcast_to(jnp.arange(take, dtype=jnp.int32), (B, take)),
+            jnp.full((B, pad), -1, jnp.int32),
+        ],
+        axis=1,
+    )
+    cache = {"conv": conv, "h": hst, "k": kc, "v": vc, "kv_pos": kv_pos}
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array],
+                cache: Params):
+    token, pos = batch["token"], batch["pos"]
+    B = token.shape[0]
+    x = blocks.embed_tokens(cfg, p, token)
+    embed0 = x
+    k, n_super, rem = _split(cfg)
+    Smax = cache["k"].shape[2]
+    slot = blocks.cache_slot(cfg, pos, Smax)
+    kv_pos = blocks.update_kv_pos(cache["kv_pos"], pos, slot)
+
+    conv_states, h_states = cache["conv"], cache["h"]
+    main = jax.tree_util.tree_map(
+        lambda t: t[: n_super * k].reshape((n_super, k) + t.shape[1:]), p["mamba"]
+    )
+    conv_main = conv_states[: n_super * k].reshape((n_super, k) + conv_states.shape[1:])
+    h_main = h_states[: n_super * k].reshape((n_super, k) + h_states.shape[1:])
+
+    def super_step(carry, xs):
+        xx = carry
+        gp, cs, hs, kc, vc = xs
+        xx, cs2, hs2 = _mamba_group_scan(cfg, gp, xx, cs, hs)
+        xx, kc2, vc2 = _shared_block_step(
+            cfg, p["shared"], xx, embed0, pos, slot, kv_pos, kc, vc
+        )
+        return xx, (cs2, hs2, kc2, vc2)
+
+    x, (conv2, h2, k2, v2) = jax.lax.scan(
+        super_step, x, (main, conv_main, h_main, cache["k"], cache["v"])
+    )
+    conv_new = conv2.reshape((n_super * k,) + conv_states.shape[1:])
+    h_new = h2.reshape((n_super * k,) + h_states.shape[1:])
+    if rem > 0:
+        tail = _take_group(p["mamba"], n_super * k, rem)
+        x, conv_t, h_t = _mamba_group_scan(
+            cfg, tail, x, conv_states[n_super * k :], h_states[n_super * k :]
+        )
+        conv_new = jnp.concatenate([conv_new, conv_t], axis=0)
+        h_new = jnp.concatenate([h_new, h_t], axis=0)
+
+    x = nn.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    logits = blocks.logits_fn(cfg, p, x)[:, 0]
+    cache = {"conv": conv_new, "h": h_new, "k": k2, "v": v2, "kv_pos": kv_pos}
+    return logits, cache

@@ -1,0 +1,96 @@
+"""The paper's forecaster (Sec. 6.1.2 / Fig. 6): LSTM(40) -> Dense(10, ReLU)
+-> Dense(1), lag n=5, 5 input features; 10,981 parameters.
+
+This is the batch-layer and speed-layer model of the faithful reproduction.
+``cell_step`` is the math the Pallas ``lstm_cell`` kernel fuses on TPU; the
+pure-jnp path here doubles as its oracle.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+
+Params = Dict[str, Any]
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    c = cfg.lstm
+    dt = jnp.dtype(cfg.param_dtype)
+    H, F = c.hidden, c.n_features
+    return {
+        "lstm": {
+            "kernel": nn.dense_init(key, "lstm/kernel", F, 4 * H, dt),
+            "recurrent": nn.dense_init(key, "lstm/recurrent", H, 4 * H, dt,
+                                       scale=H**-0.5),
+            "bias": _forget_bias(H, dt),
+        },
+        "dense": {
+            "dense_w": nn.dense_init(key, "dense/dense_w", H, c.dense, dt),
+            "dense_b": nn.zeros((c.dense,), dt),
+        },
+        "head": {
+            "head_w": nn.dense_init(key, "head/head_w", c.dense, c.out_dim, dt),
+            "head_b": nn.zeros((c.out_dim,), dt),
+        },
+    }
+
+
+def _forget_bias(H: int, dt) -> jax.Array:
+    """Keras-style unit forget-gate bias (gate order i, f, g, o)."""
+    b = jnp.zeros((4 * H,), jnp.float32)
+    return b.at[H : 2 * H].set(1.0).astype(dt)
+
+
+def cell_step(p: Params, x_t: jax.Array, h: jax.Array, c: jax.Array):
+    """One LSTM cell step.  x_t: (B, F); h, c: (B, H)."""
+    H = h.shape[-1]
+    z = x_t @ p["kernel"] + h @ p["recurrent"] + p["bias"]
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def forward(cfg: ModelConfig, p: Params, x: jax.Array,
+            use_pallas: Optional[bool] = None) -> jax.Array:
+    """x: (B, lag, F) -> prediction (B, out_dim)."""
+    c = cfg.lstm
+    B = x.shape[0]
+    use_pallas = cfg.use_pallas if use_pallas is None else use_pallas
+    if use_pallas:
+        from repro.kernels.lstm_cell import ops as lstm_ops
+
+        h = lstm_ops.lstm_sequence(
+            x, p["lstm"]["kernel"], p["lstm"]["recurrent"], p["lstm"]["bias"]
+        )
+    else:
+        h0 = jnp.zeros((B, c.hidden), x.dtype)
+        c0 = jnp.zeros((B, c.hidden), x.dtype)
+
+        def step(carry, x_t):
+            h, cc = carry
+            h, cc = cell_step(p["lstm"], x_t, h, cc)
+            return (h, cc), None
+
+        (h, _), _ = jax.lax.scan(step, (h0, c0), x.transpose(1, 0, 2))
+    d = jax.nn.relu(h @ p["dense"]["dense_w"] + p["dense"]["dense_b"])
+    return d @ p["head"]["head_w"] + p["head"]["head_b"]
+
+
+def loss_fn(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array]):
+    """MSE regression loss.  batch: {"x": (B,lag,F), "y": (B,out)}."""
+    pred = forward(cfg, p, batch["x"])
+    err = (pred - batch["y"]).astype(jnp.float32)
+    loss = jnp.mean(err * err)
+    return loss, {"mse": loss, "rmse": jnp.sqrt(loss)}
+
+
+def predict(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    return forward(cfg, p, x)

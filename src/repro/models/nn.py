@@ -1,0 +1,155 @@
+"""Minimal functional NN substrate (no flax/haiku in this container).
+
+Params are nested dicts of jnp arrays.  Initializers take an explicit key
+derived by folding the parameter path into the root key, so adding parameters
+never reshuffles existing ones.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _path_key(key: jax.Array, path: str) -> jax.Array:
+    """Deterministic per-path key: fold a stable hash of the path string."""
+    h = int.from_bytes(hashlib.md5(path.encode()).digest()[:4], "little")
+    return jax.random.fold_in(key, h)
+
+
+def dense_init(
+    key: jax.Array,
+    path: str,
+    in_dim: int,
+    out_dim: int,
+    dtype: jnp.dtype,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Truncated-normal fan-in init (the standard transformer choice)."""
+    std = scale if scale is not None else in_dim**-0.5
+    w = jax.random.truncated_normal(
+        _path_key(key, path), -2.0, 2.0, (in_dim, out_dim), jnp.float32
+    )
+    return (w * std).astype(dtype)
+
+
+def stacked_dense_init(
+    key: jax.Array,
+    path: str,
+    n: int,
+    in_dim: int,
+    out_dim: int,
+    dtype: jnp.dtype,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """(n, in, out) stacked weights for scan-over-layers / experts."""
+    std = scale if scale is not None else in_dim**-0.5
+    w = jax.random.truncated_normal(
+        _path_key(key, path), -2.0, 2.0, (n, in_dim, out_dim), jnp.float32
+    )
+    return (w * std).astype(dtype)
+
+
+def embed_init(
+    key: jax.Array, path: str, vocab: int, dim: int, dtype: jnp.dtype
+) -> jax.Array:
+    w = jax.random.normal(_path_key(key, path), (vocab, dim), jnp.float32)
+    return (w * dim**-0.5).astype(dtype)
+
+
+def zeros(shape: Sequence[int], dtype: jnp.dtype) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape: Sequence[int], dtype: jnp.dtype) -> jax.Array:
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Ops
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm in f32, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def mlp_act(h_in: jax.Array, variant: str, gate: Optional[jax.Array] = None) -> jax.Array:
+    """Activation for the MLP hidden.  Gated variants consume ``gate``."""
+    if variant == "swiglu":
+        assert gate is not None
+        return jax.nn.silu(gate) * h_in
+    if variant == "geglu":
+        assert gate is not None
+        return jax.nn.gelu(gate, approximate=True) * h_in
+    if variant == "squared_relu":
+        r = jax.nn.relu(h_in)
+        return r * r
+    if variant == "relu":
+        return jax.nn.relu(h_in)
+    if variant == "gelu":
+        return jax.nn.gelu(h_in, approximate=True)
+    raise ValueError(f"unknown mlp variant {variant!r}")
+
+
+def is_gated(variant: str) -> bool:
+    return variant in ("swiglu", "geglu")
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies, f32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate pairs. x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = rope_freqs(d, theta)  # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def tree_cast(params: Params, dtype) -> Params:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params,
+    )

@@ -1,0 +1,304 @@
+"""RWKV-6 "Finch" [arXiv:2404.05892] — attention-free time-mix with
+data-dependent decay.
+
+Per head (head_size N): with receptance r_t, key k_t, value v_t, decay
+w_t in (0,1)^N (data-dependent via a LoRA on the token-shifted input) and
+bonus u:
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Token-shift mixing uses the RWKV6 data-dependent lerp (ddlerp): a shared
+first-stage mix plus a 5-way LoRA producing per-projection mix coefficients
+for (r, k, v, g, w).
+
+Adaptations noted in DESIGN.md: RMSNorm instead of LayerNorm (gamma-only),
+group-norm on the time-mix output approximated per-head by RMS.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import blocks, nn
+
+Params = Dict[str, Any]
+
+N_MIX = 5  # r, k, v, g, w
+
+
+def init_layer_stack(key, cfg: ModelConfig, n: int) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    r = cfg.rwkv.decay_lora
+    H = d // cfg.rwkv.head_size
+    N = cfg.rwkv.head_size
+
+    def mk(name, i, o):
+        return nn.stacked_dense_init(key, f"layers/{name}", n, i, o, dt)
+
+    p = {
+        "attn_norm": nn.ones((n, d), dt),
+        "mlp_norm": nn.ones((n, d), dt),
+        # time-mix projections
+        "w_r": mk("w_r", d, d),
+        "w_k": mk("w_k", d, d),
+        "w_v": mk("w_v", d, d),
+        "w_g": mk("w_g", d, d),
+        "w_o": mk("w_o", d, d),
+        # ddlerp token-shift mixing
+        "mix_base": nn.zeros((n, N_MIX + 1, d), dt),
+        "mix_lora_a": mk("mix_lora_a", d, N_MIX * 32),
+        "mix_lora_b": (
+            jax.random.normal(
+                nn._path_key(key, "layers/mix_lora_b"), (n, N_MIX, 32, d), jnp.float32
+            )
+            * 0.01
+        ).astype(dt),
+        # data-dependent decay
+        "decay_base": nn.zeros((n, d), dt),
+        "decay_lora_a": mk("decay_lora_a", d, r),
+        "decay_lora_b": mk("decay_lora_b", r, d),
+        "bonus": nn.zeros((n, H, N), dt),
+        "ln_x": nn.ones((n, d), dt),
+        # channel-mix
+        "ck_mix": nn.zeros((n, 2, d), dt),
+        "ck_in": mk("ck_in", d, cfg.d_ff),
+        "ck_out": mk("ck_out", cfg.d_ff, d),
+        "ck_rec": mk("ck_rec", d, d),
+    }
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        **blocks.init_embed(key, cfg),
+        "final_norm": nn.ones((cfg.d_model,), dt),
+        "layers": init_layer_stack(key, cfg, cfg.n_layers),
+    }
+
+
+# ---------------------------------------------------------------------------
+# time mix
+# ---------------------------------------------------------------------------
+
+
+def _ddlerp(lp: Params, x: jax.Array, x_prev: jax.Array):
+    """RWKV6 data-dependent token-shift mix -> (xr, xk, xv, xg, xw)."""
+    xx = x_prev - x
+    mu = lp["mix_base"].astype(x.dtype)  # (6, d)
+    xxx = x + xx * mu[0]
+    lora = jnp.tanh(nn.dense(xxx, lp["mix_lora_a"]))  # (B,T,5*32)
+    B_, T_ = x.shape[:2]
+    lora = lora.reshape(B_, T_, N_MIX, 32)
+    mix = mu[1:] + jnp.einsum("btnr,nrd->btnd", lora, lp["mix_lora_b"].astype(x.dtype))
+    outs = [x + xx * mix[:, :, i] for i in range(N_MIX)]
+    return outs
+
+
+def wkv_stepwise(r, k, v, w, u, state):
+    """Per-timestep WKV scan (baseline XLA path).  r/k/v/w: (B,T,H,N) f32;
+    u: (H,N); state: (B,H,N,N) f32.  Returns (y (B,T,H,N), state)."""
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs  # (B,H,N) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)  # ys: (T,B,H,N)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk: int = 64):
+    """Chunked-parallel WKV (perf path; see EXPERIMENTS.md §Perf).
+
+    Mathematically identical to ``wkv_stepwise``: within a chunk of C steps
+    the intra-chunk interaction is one masked (C, C) matrix per head built
+    from pairwise decay products exp(L_{t-1} - L_s) (computed in log space,
+    always <= 1 so no overflow), and the cross-chunk carry is a single
+    matmul-style state update.  Replaces T sequential tiny-op iterations by
+    T/C iterations of large fused ops — an order-of-magnitude HBM-traffic
+    reduction in the XLA-lowered while loop.
+    """
+    B, T, H, N = r.shape
+    C = min(chunk, T)
+    pad = (-T) % C
+    if pad:
+        zr = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zr(r), zr(k), zr(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    nC = (T + pad) // C
+
+    def chunk_step(S, xs):
+        rc, kc, vc, wc = xs  # (B,C,H,N)
+        # floor must be a NORMAL f32 (subnormals flush to zero on XLA:CPU)
+        lw = jnp.log(jnp.maximum(wc, 1e-30))  # (B,C,H,N), <= 0
+        L = jnp.cumsum(lw, axis=1)  # inclusive
+        L_excl = L - lw  # exclusive: L_{t-1}
+        # inter: state contribution, decayed on the key channel
+        r_dec = rc * jnp.exp(L_excl)
+        y_inter = jnp.einsum("bthn,bhnm->bthm", r_dec, S)
+        # intra: A[t,s] = sum_n r_t k_s exp(L_{t-1,n} - L_{s,n}) for s < t
+        D = L_excl[:, :, None] - L[:, None, :]  # (B,t,s,H,N); <=0 for s<t
+        D = jnp.minimum(D, 0.0)  # padded/invalid region clamped
+        # NOTE: a bf16 cast of exp(D) was tried and REFUTED (+31% traffic:
+        # the converts materialize extra tensors and block fusion — see
+        # EXPERIMENTS.md §Perf); keep f32 end-to-end here.
+        A = jnp.einsum("bthn,bshn,btshn->btsh", rc, kc, jnp.exp(D))
+        mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+        A = jnp.where(mask[None, :, :, None], A, 0.0)
+        y_intra = jnp.einsum("btsh,bshn->bthn", A, vc)
+        # current-step bonus term
+        y_diag = jnp.einsum("bthn,hn,bthn->bth", rc, u, kc)[..., None] * vc
+        # state update: S' = diag(exp(L_C)) S + sum_s (k_s exp(L_C - L_s)) v_s^T
+        decay_all = jnp.exp(L[:, -1][:, None] - L)  # (B,C,H,N), <= 1
+        k_dec = kc * decay_all
+        S = jnp.exp(L[:, -1])[..., None] * S + jnp.einsum(
+            "bshn,bshm->bhnm", k_dec, vc
+        )
+        return S, y_inter + y_intra + y_diag
+
+    xs = tuple(a.reshape(B, nC, C, H, N).transpose(1, 0, 2, 3, 4)
+               for a in (r, k, v, w))
+    state, ys = jax.lax.scan(chunk_step, state, xs)  # (nC,B,C,H,N)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nC * C, H, N)
+    return y[:, :T], state
+
+
+def time_mix_scan(cfg: ModelConfig, lp: Params, x: jax.Array, x_last: jax.Array,
+                  state: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sequence form.  x: (B,T,d); x_last: (B,d) shift state;
+    state: (B,H,N,N) f32.  Returns (out, new_x_last, new_state)."""
+    B, T, d = x.shape
+    N = cfg.rwkv.head_size
+    H = d // N
+    x_prev = jnp.concatenate([x_last[:, None], x[:, :-1]], axis=1)
+    xr, xk, xv, xg, xw = _ddlerp(lp, x, x_prev)
+
+    r = nn.dense(xr, lp["w_r"]).reshape(B, T, H, N)
+    k = nn.dense(xk, lp["w_k"]).reshape(B, T, H, N)
+    v = nn.dense(xv, lp["w_v"]).reshape(B, T, H, N)
+    g = jax.nn.silu(nn.dense(xg, lp["w_g"]))
+    dw = jnp.tanh(nn.dense(xw, lp["decay_lora_a"]))
+    dw = nn.dense(dw, lp["decay_lora_b"]) + lp["decay_base"].astype(x.dtype)
+    w = jnp.exp(-jnp.exp(dw.astype(jnp.float32))).reshape(B, T, H, N)
+    u = lp["bonus"].astype(jnp.float32)  # (H, N)
+
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    if cfg.scan_chunked and T > 1:
+        ys, state = wkv_chunked(rf, kf, vf, w, u, state, chunk=cfg.scan_chunk)
+    else:
+        ys, state = wkv_stepwise(rf, kf, vf, w, u, state)
+    y = ys.reshape(B, T, d).astype(x.dtype)
+    # per-head RMS (group-norm stand-in), then gate and output proj
+    y = nn.rms_norm(y, lp["ln_x"], cfg.norm_eps)
+    out = nn.dense(y * g, lp["w_o"])
+    return shard(out, "batch", "seq", "embed"), x[:, -1], state
+
+
+# ---------------------------------------------------------------------------
+# channel mix
+# ---------------------------------------------------------------------------
+
+
+def channel_mix(cfg: ModelConfig, lp: Params, x: jax.Array, x_last: jax.Array):
+    B, T, d = x.shape
+    x_prev = jnp.concatenate([x_last[:, None], x[:, :-1]], axis=1)
+    mu = lp["ck_mix"].astype(x.dtype)  # (2, d)
+    xk = x + (x_prev - x) * mu[0]
+    xr = x + (x_prev - x) * mu[1]
+    kk = jax.nn.relu(nn.dense(xk, lp["ck_in"]))
+    kk = shard(kk * kk, "batch", "seq", "ffn")
+    vv = nn.dense(kk, lp["ck_out"])
+    rr = jax.nn.sigmoid(nn.dense(xr, lp["ck_rec"]))
+    return shard(rr * vv, "batch", "seq", "embed"), x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+def _layer(cfg, lp, x, shift_tm, shift_cm, state):
+    h = nn.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    o, shift_tm, state = time_mix_scan(cfg, lp, h, shift_tm, state)
+    x = x + o
+    h = nn.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    o, shift_cm = channel_mix(cfg, lp, h, shift_cm)
+    return x + o, shift_tm, shift_cm, state
+
+
+def forward(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array],
+            cache=None):
+    """Full-sequence forward; returns (hidden, aux=0, new_cache)."""
+    x = blocks.embed_tokens(cfg, p, batch["tokens"])
+    B, T, d = x.shape
+    N = cfg.rwkv.head_size
+    H = d // N
+    L = cfg.n_layers
+    if cache is None:
+        cache = init_cache(cfg, B, 0)
+
+    def step(carry, xs):
+        x = carry
+        lp, st_tm, st_cm, st = xs
+        # note: norm state handled inside _layer with pre-norm inputs
+        h = nn.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        o, st_tm2, st2 = time_mix_scan(cfg, lp, h, st_tm, st)
+        x = x + o
+        h2 = nn.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        o2, st_cm2 = channel_mix(cfg, lp, h2, st_cm)
+        return x + o2, (st_tm2, st_cm2, st2)
+
+    if cfg.remat == "block":
+        step = jax.checkpoint(step, prevent_cse=False)
+
+    x, (shift_tm, shift_cm, states) = jax.lax.scan(
+        step, x, (p["layers"], cache["shift_tm"], cache["shift_cm"], cache["state"])
+    )
+    x = nn.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    new_cache = {"shift_tm": shift_tm, "shift_cm": shift_cm, "state": states}
+    return x, jnp.zeros((), jnp.float32), new_cache
+
+
+def loss_fn(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array]):
+    h, aux, _ = forward(cfg, p, batch)
+    logits = blocks.logits_fn(cfg, p, h)
+    loss = blocks.token_xent(logits, batch["targets"], batch.get("mask"))
+    return loss, {"xent": loss, "aux": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0) -> Params:
+    """RWKV decode state is O(1) in sequence length (hence long_500k runs)."""
+    d = cfg.d_model
+    N = cfg.rwkv.head_size
+    H = d // N
+    L = cfg.n_layers
+    return {
+        "state": jnp.zeros((L, batch, H, N, N), jnp.float32),
+        "shift_tm": jnp.zeros((L, batch, d), jnp.dtype(cfg.dtype)),
+        "shift_cm": jnp.zeros((L, batch, d), jnp.dtype(cfg.dtype)),
+    }
+
+
+def prefill(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array],
+            max_len=None):
+    h, _, cache = forward(cfg, p, batch)
+    logits = blocks.logits_fn(cfg, p, h[:, -1:])[:, 0]
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array],
+                cache: Params):
+    tokens = batch["token"]  # (B,1)
+    h, _, cache = forward(cfg, p, {"tokens": tokens}, cache=cache)
+    logits = blocks.logits_fn(cfg, p, h)[:, 0]
+    return logits, cache

@@ -1,0 +1,192 @@
+"""Mamba2 state-space block (used by zamba2's backbone) [arXiv:2405.21060
+SSD form; zamba2 per arXiv:2411.15242].
+
+Per head (head dim P, state dim N), scalar decay A per head:
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * (x_t  outer  B_t)
+    y_t = h_t @ C_t + D * x_t
+
+with a causal depthwise conv on (x, B, C), softplus dt, and a gated RMSNorm
+(silu(z)) before the output projection.  The sequence form below scans time
+steps (XLA path); the Pallas chunked-SSD kernel is the TPU-optimized
+equivalent (repro.kernels.ssm_scan).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import nn
+
+Params = Dict[str, Any]
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    xbc_dim = d_inner + 2 * s.state_dim  # x, B, C (single group)
+    d_in_proj = 2 * d_inner + 2 * s.state_dim + H  # z, x, B, C, dt
+    return d_inner, H, xbc_dim, d_in_proj
+
+
+def init_block(key, path: str, cfg: ModelConfig, n: int) -> Params:
+    dt_ = jnp.dtype(cfg.param_dtype)
+    s = cfg.ssm
+    d_inner, H, xbc_dim, d_in_proj = dims(cfg)
+
+    def mk(name, i, o):
+        return nn.stacked_dense_init(key, f"{path}/{name}", n, i, o, dt_)
+
+    return {
+        "in_proj": mk("in_proj", cfg.d_model, d_in_proj),
+        "conv_w": (
+            jax.random.normal(
+                nn._path_key(key, f"{path}/conv_w"), (n, s.conv_dim, xbc_dim),
+                jnp.float32,
+            )
+            * (s.conv_dim**-0.5)
+        ).astype(dt_),
+        "conv_b": nn.zeros((n, xbc_dim), dt_),
+        "A_log": nn.zeros((n, H), jnp.float32),
+        "D": nn.ones((n, H), jnp.float32),
+        "dt_bias": nn.zeros((n, H), jnp.float32),
+        "ssm_norm": nn.ones((n, d_inner), dt_),
+        "out_proj": mk("out_proj", d_inner, cfg.d_model),
+    }
+
+
+def _conv_scan(xbc: jax.Array, conv_state: jax.Array, w: jax.Array, b: jax.Array):
+    """Causal depthwise conv.  xbc: (B,T,C); conv_state: (B,W-1,C) history."""
+    W = w.shape[0]
+    full = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    out = jnp.zeros_like(xbc)
+    for i in range(W):
+        out = out + full[:, i : i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+    out = out + b.astype(xbc.dtype)
+    new_state = full[:, full.shape[1] - (W - 1) :]
+    return jax.nn.silu(out), new_state
+
+
+def apply_block(
+    cfg: ModelConfig,
+    lp: Params,
+    x: jax.Array,  # (B, T, d)
+    conv_state: jax.Array,  # (B, W-1, xbc_dim)
+    h_state: jax.Array,  # (B, H, P, N) f32
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    s = cfg.ssm
+    B, T, _ = x.shape
+    d_inner, H, xbc_dim, _ = dims(cfg)
+    P, N = s.head_dim, s.state_dim
+
+    zxbcdt = nn.dense(x, lp["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + xbc_dim], axis=-1)
+    xbc, conv_state = _conv_scan(xbc, conv_state, lp["conv_w"], lp["conv_b"])
+    xs, Bmat, Cmat = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])  # (B,T,H)
+    A = -jnp.exp(lp["A_log"])  # (H,)
+    xs_h = xs.reshape(B, T, H, P).astype(jnp.float32)
+    Bf = Bmat.astype(jnp.float32)  # (B,T,N)
+    Cf = Cmat.astype(jnp.float32)
+
+    if cfg.scan_chunked and T > 1:
+        ys, h_state = ssd_chunked(xs_h, Bf, Cf, dt, A, h_state,
+                                  chunk=cfg.scan_chunk)
+    else:
+        ys, h_state = ssd_stepwise(xs_h, Bf, Cf, dt, A, h_state)
+    y = ys + lp["D"][None, None, :, None] * xs_h
+    y = y.reshape(B, T, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = nn.rms_norm(y, lp["ssm_norm"], cfg.norm_eps)
+    out = nn.dense(y, lp["out_proj"])
+    return shard(out, "batch", "seq", "embed"), conv_state, h_state
+
+
+def ssd_stepwise(x, b, c, dt, A, h0):
+    """Per-timestep selective scan (baseline XLA path).
+    x: (B,T,H,P) f32; b,c: (B,T,N); dt: (B,T,H); A: (H,); h0: (B,H,P,N).
+    Returns (y (B,T,H,P), h_final)."""
+
+    def step(h, xs_t):
+        xt, bt, ct, dtt = xs_t  # (B,H,P), (B,N), (B,N), (B,H)
+        decay = jnp.exp(dtt * A[None])  # (B,H)
+        upd = (dtt[..., None, None] * xt[..., None]) * bt[:, None, None, :]
+        h = decay[..., None, None] * h + upd  # (B,H,P,N)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    xs_t = (
+        x.transpose(1, 0, 2, 3),
+        b.transpose(1, 0, 2),
+        c.transpose(1, 0, 2),
+        dt.transpose(1, 0, 2),
+    )
+    h, ys = jax.lax.scan(step, h0, xs_t)  # ys: (T,B,H,P)
+    return ys.transpose(1, 0, 2, 3), h
+
+
+def ssd_chunked(x, b, c, dt, A, h0, chunk: int = 64):
+    """Chunked SSD (Mamba2's own blocked algorithm, XLA form; §Perf path).
+
+    The decay is a SCALAR per head, so the intra-chunk interaction matrix
+    M[t,s] = exp(L_t - L_s) * dt_s * (B_s . C_t)  (s <= t, inclusive)
+    is (C, C) per (batch, head) — one masked matmul replaces C sequential
+    rank-1 state updates; the cross-chunk carry is a single einsum.
+    """
+    B, T, H, P = x.shape
+    N = b.shape[-1]
+    C = min(chunk, T)
+    pad = (-T) % C
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0: identity step
+    nC = (T + pad) // C
+
+    def chunk_step(h, xs):
+        xc, bc, cc, dtc = xs  # (B,C,H,P), (B,C,N), (B,C,N), (B,C,H)
+        la = dtc * A[None, None]  # (B,C,H), <= 0
+        L = jnp.cumsum(la, axis=1)  # inclusive
+        # inter: decayed initial state read out by C_t
+        y_inter = jnp.exp(L)[..., None] * jnp.einsum("bhpn,btn->bthp", h, cc)
+        # intra: scalar decays -> (B,t,s,H) matrix, mask s<=t
+        Dm = L[:, :, None] - L[:, None, :]  # (B,t,s,H)
+        Dm = jnp.minimum(Dm, 0.0)
+        bcct = jnp.einsum("bsn,btn->bts", bc, cc)  # (B,t,s)
+        M = jnp.exp(Dm) * dtc[:, None, :, :] * bcct[..., None]
+        mask = jnp.tril(jnp.ones((C, C), bool))  # inclusive
+        M = jnp.where(mask[None, :, :, None], M, 0.0)
+        y_intra = jnp.einsum("btsh,bshp->bthp", M, xc)
+        # state update
+        decay_all = jnp.exp(L[:, -1][:, None] - L)  # (B,C,H) <= 1
+        upd = jnp.einsum(
+            "bsh,bshp,bsn->bhpn", decay_all * dtc, xc, bc
+        )
+        h = jnp.exp(L[:, -1])[..., None, None] * h + upd
+        return h, y_inter + y_intra
+
+    xs = (
+        x.reshape(B, nC, C, H, P).transpose(1, 0, 2, 3, 4),
+        b.reshape(B, nC, C, N).transpose(1, 0, 2, 3),
+        c.reshape(B, nC, C, N).transpose(1, 0, 2, 3),
+        dt.reshape(B, nC, C, H).transpose(1, 0, 2, 3),
+    )
+    h, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nC * C, H, P)
+    return y[:, :T], h
+
+
+def init_block_cache(cfg: ModelConfig, n: int, batch: int):
+    s = cfg.ssm
+    d_inner, H, xbc_dim, _ = dims(cfg)
+    return {
+        "conv": jnp.zeros((n, batch, s.conv_dim - 1, xbc_dim), jnp.dtype(cfg.dtype)),
+        "h": jnp.zeros((n, batch, H, s.head_dim, s.state_dim), jnp.float32),
+    }

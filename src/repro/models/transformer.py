@@ -1,0 +1,284 @@
+"""Decoder-only transformer covering the dense and MoE families
+(tinyllama / codeqwen / danube / nemotron / grok / kimi and the gemma
+backbone of paligemma).
+
+Layers are scan-stacked: params carry a leading L dim and the forward pass is
+a single ``lax.scan`` whose body is one block (optionally ``jax.checkpoint``'d
+when cfg.remat == "block").  MoE configs may reserve the first
+``first_dense_layers`` layers as plain dense blocks (kimi-k2 style) — those
+get their own (smaller) scan.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import blocks, moe as moe_mod, nn
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _n_moe_layers(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_dense_layers, n_moe_layers) of the stack."""
+    if cfg.moe is None:
+        return cfg.n_layers, 0
+    nd = min(cfg.moe.first_dense_layers, cfg.n_layers)
+    return nd, cfg.n_layers - nd
+
+
+def init_layer_stack(key, path: str, cfg: ModelConfig, n: int, use_moe: bool) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "attn_norm": nn.ones((n, cfg.d_model), dt),
+        "mlp_norm": nn.ones((n, cfg.d_model), dt),
+        **blocks.init_attn(key, f"{path}/attn", cfg, n_stack=n),
+    }
+    if use_moe:
+        p.update(moe_mod.init_moe(key, f"{path}/moe", cfg, n_stack=n))
+    else:
+        p.update(blocks.init_mlp(key, f"{path}/mlp", cfg, n_stack=n))
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    nd, nm = _n_moe_layers(cfg)
+    p: Params = {**blocks.init_embed(key, cfg), "final_norm": nn.ones((cfg.d_model,), dt)}
+    if nd > 0:
+        p["layers"] = init_layer_stack(key, "layers", cfg, nd, use_moe=False)
+    if nm > 0:
+        p["moe_layers"] = init_layer_stack(key, "moe_layers", cfg, nm, use_moe=True)
+    if cfg.frontend is not None:
+        p["proj_in"] = nn.dense_init(
+            key, "proj_in", cfg.frontend.embed_dim, cfg.d_model, dt
+        )
+    return p
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _block(cfg: ModelConfig, lp: Params, x, positions, use_moe: bool, ep_mode):
+    h = nn.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    x = x + blocks.self_attention(cfg, lp, h, positions)
+    h = nn.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    if use_moe:
+        y, aux = moe_mod.apply_moe(cfg, lp, h, ep_mode=ep_mode)
+    else:
+        y, aux = blocks.apply_mlp(cfg, lp, h), jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def _scan_blocks(cfg: ModelConfig, stack: Params, x, positions, use_moe: bool,
+                 ep_mode: Optional[str]):
+    body = partial(_block, cfg, use_moe=use_moe, ep_mode=ep_mode)
+
+    def step(carry, lp):
+        y, aux = body(lp, carry, positions=positions)
+        return y, aux
+
+    if cfg.remat == "block":
+        step = jax.checkpoint(step, prevent_cse=False)
+    elif cfg.remat == "dots":
+        # save matmul outputs, recompute only cheap elementwise work
+        step = jax.checkpoint(
+            step, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    x, auxes = jax.lax.scan(step, x, stack)
+    return x, jnp.sum(auxes)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array]):
+    """Token embeddings, with optional modality prefix (VLM carve-out)."""
+    x = blocks.embed_tokens(cfg, p, batch["tokens"])
+    B, S = batch["tokens"].shape
+    if cfg.frontend is not None and "prefix_embed" in batch:
+        pe = nn.dense(batch["prefix_embed"].astype(x.dtype), p["proj_in"])
+        x = jnp.concatenate([pe, x], axis=1)
+        S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return x, positions
+
+
+def forward(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array],
+            ep_mode: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (hidden (B,S,d), aux_loss)."""
+    x, positions = embed_inputs(cfg, p, batch)
+    aux = jnp.zeros((), jnp.float32)
+    if "layers" in p:
+        x, a = _scan_blocks(cfg, p["layers"], x, positions, use_moe=False,
+                            ep_mode=ep_mode)
+        aux = aux + a
+    if "moe_layers" in p:
+        x, a = _scan_blocks(cfg, p["moe_layers"], x, positions, use_moe=True,
+                            ep_mode=ep_mode)
+        aux = aux + a
+    x = nn.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def loss_fn(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array]):
+    h, aux = forward(cfg, p, batch)
+    n_prefix = h.shape[1] - batch["tokens"].shape[1]
+    if n_prefix > 0:
+        h = h[:, n_prefix:]  # loss only over text positions
+    logits = blocks.logits_fn(cfg, p, h)
+    loss = blocks.token_xent(logits, batch["targets"], batch.get("mask"))
+    metrics = {"xent": loss, "aux": aux}
+    return loss + aux, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    return blocks.init_attn_cache(cfg, cfg.n_layers, batch, max_len)
+
+
+def prefill(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array],
+            max_len: Optional[int] = None):
+    """Run the prompt, return (last-position logits, populated cache)."""
+    x, positions = embed_inputs(cfg, p, batch)
+    B, S = x.shape[:2]
+    max_len = max_len or S
+    Smax = min(max_len, cfg.window_size) if cfg.attention == "swa" else max_len
+    nd, nm = _n_moe_layers(cfg)
+
+    kv_list = []
+
+    def make_step(use_moe):
+        def step(carry, lp):
+            xx = carry
+            h = nn.rms_norm(xx, lp["attn_norm"], cfg.norm_eps)
+            q, k, v = blocks.attn_qkv(cfg, lp, h, positions)
+            window = cfg.window_size if cfg.attention == "swa" else 0
+            from repro.models.attention import attend
+
+            o = attend(q, k, v, positions, positions, causal=True,
+                       window=window, chunk=cfg.attn_chunk)
+            o = o.reshape(B, S, cfg.q_dim)
+            xx = xx + nn.dense(o, lp["wo"])
+            h = nn.rms_norm(xx, lp["mlp_norm"], cfg.norm_eps)
+            if use_moe:
+                y, _ = moe_mod.apply_moe(cfg, lp, h,
+                                         no_drop=cfg.moe_exact_serving)
+            else:
+                y = blocks.apply_mlp(cfg, lp, h)
+            return xx + y, (k, v)
+
+        return step
+
+    x_out = x
+    for name, use_moe in (("layers", False), ("moe_layers", True)):
+        if name in p:
+            x_out, kv = jax.lax.scan(make_step(use_moe), x_out, p[name])
+            kv_list.append(kv)
+
+    k_all = jnp.concatenate([kv[0] for kv in kv_list], axis=0)  # (L,B,S,H,D)
+    v_all = jnp.concatenate([kv[1] for kv in kv_list], axis=0)
+
+    # place into fixed cache (keep the last Smax positions for SWA)
+    take = min(S, Smax)
+    k_keep = k_all[:, :, S - take:]
+    v_keep = v_all[:, :, S - take:]
+    if cfg.attention == "swa":
+        # ring layout: position pos lives in slot pos % Smax
+        pos_keep = jnp.arange(S - take, S, dtype=jnp.int32)
+        slots = pos_keep % Smax
+        L = k_all.shape[0]
+        kc = jnp.zeros((L, B, Smax, cfg.n_kv_heads, cfg.resolved_head_dim), k_all.dtype)
+        vc = jnp.zeros_like(kc)
+        kc = kc.at[:, :, slots].set(k_keep)
+        vc = vc.at[:, :, slots].set(v_keep)
+        kv_pos = jnp.full((B, Smax), -1, jnp.int32).at[:, slots].set(pos_keep[None])
+    else:
+        pad = Smax - take
+        kc = jnp.pad(k_keep, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v_keep, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.concatenate(
+            [
+                jnp.broadcast_to(jnp.arange(take, dtype=jnp.int32), (B, take)),
+                jnp.full((B, pad), -1, jnp.int32),
+            ],
+            axis=1,
+        )
+
+    x_out = nn.rms_norm(x_out, p["final_norm"], cfg.norm_eps)
+    logits = blocks.logits_fn(cfg, p, x_out[:, -1:])[:, 0]
+    return logits, {"k": kc, "v": vc, "kv_pos": kv_pos}
+
+
+def decode_step(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array],
+                cache: Params):
+    """One token step.  batch: {"token": (B,1), "pos": (B,)}."""
+    token, pos = batch["token"], batch["pos"]
+    B = token.shape[0]
+    x = blocks.embed_tokens(cfg, p, token)
+    Smax = cache["k"].shape[2]
+    slot = blocks.cache_slot(cfg, pos, Smax)
+    kv_pos = blocks.update_kv_pos(cache["kv_pos"], pos, slot)
+
+    nd, nm = _n_moe_layers(cfg)
+    offsets = {"layers": 0, "moe_layers": nd}
+
+    def make_step(use_moe):
+        def step(carry, xs):
+            xx = carry
+            lp, kc, vc = xs
+            h = nn.rms_norm(xx, lp["attn_norm"], cfg.norm_eps)
+            o, kc, vc = blocks.cached_attention_step(
+                cfg, lp, h, pos, slot, kv_pos, kc, vc
+            )
+            xx = xx + o
+            h = nn.rms_norm(xx, lp["mlp_norm"], cfg.norm_eps)
+            if use_moe:
+                y, _ = moe_mod.apply_moe(cfg, lp, h, ep_mode="onehot",
+                                         no_drop=cfg.moe_exact_serving)
+            else:
+                y = blocks.apply_mlp(cfg, lp, h)
+            return xx + y, (kc, vc)
+
+        return step
+
+    x_out = x
+    new_k, new_v = [], []
+    for name, use_moe in (("layers", False), ("moe_layers", True)):
+        if name in p:
+            n = p[name]["attn_norm"].shape[0]
+            off = offsets[name]
+            kc = jax.lax.dynamic_slice_in_dim(cache["k"], off, n, axis=0)
+            vc = jax.lax.dynamic_slice_in_dim(cache["v"], off, n, axis=0)
+            x_out, (k2, v2) = jax.lax.scan(
+                make_step(use_moe), x_out, (p[name], kc, vc)
+            )
+            new_k.append(k2)
+            new_v.append(v2)
+
+    x_out = nn.rms_norm(x_out, p["final_norm"], cfg.norm_eps)
+    logits = blocks.logits_fn(cfg, p, x_out)[:, 0]
+    cache = {
+        "k": jnp.concatenate(new_k, axis=0),
+        "v": jnp.concatenate(new_v, axis=0),
+        "kv_pos": kv_pos,
+    }
+    return logits, cache

@@ -1,0 +1,19 @@
+from repro.runtime.bus import (  # noqa: F401
+    CapacityError,
+    EventKernel,
+    Link,
+    Message,
+    Site,
+    TopicBus,
+    Topology,
+    paper_topology,
+)
+from repro.runtime.deployment import (  # noqa: F401
+    ALL_DEPLOYMENTS,
+    Deployment,
+    cloud_centric,
+    edge_centric,
+    edge_cloud_integrated,
+)
+from repro.runtime.latency import CostModel, LatencyLedger  # noqa: F401
+from repro.runtime.modules import EdgeCloudSimulation, SimulationResult  # noqa: F401

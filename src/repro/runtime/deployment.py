@@ -1,0 +1,68 @@
+"""The paper's three deployment modalities (Sec. 4, Fig. 3): module -> site
+placement maps.  The same module implementations run anywhere (Sec. 4.4's
+"same modules and implementations reused when switching deployments")."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+MODULES = (
+    "data_injection",
+    "batch_inference",
+    "speed_inference",
+    "hybrid_inference",
+    "model_sync",
+    "data_sync",
+    "speed_training",
+    "archiving",
+)
+
+
+@dataclass(frozen=True)
+class Deployment:
+    name: str
+    placement: Dict[str, str]  # module -> site name
+
+    def site_of(self, module: str) -> str:
+        return self.placement[module]
+
+
+def edge_centric() -> Deployment:
+    """Everything on the edge (whole-cloud-unavailable scenario, Fig. 3a).
+    Speed training on the Pi exceeds its capacity -> CapacityError, which is
+    the paper's measured OOM result."""
+    return Deployment(
+        "edge-centric", {m: "edge" for m in MODULES}
+    )
+
+
+def cloud_centric() -> Deployment:
+    """Edge only senses + forwards; all processing in the cloud (Fig. 3b)."""
+    p = {m: "cloud" for m in MODULES}
+    p["data_injection"] = "edge"  # sensing stays physically at the source
+    return Deployment("cloud-centric", p)
+
+
+def edge_cloud_integrated() -> Deployment:
+    """Inference + sync on edge; speed training + archiving on cloud
+    (Fig. 3c) — the paper's recommended deployment."""
+    return Deployment(
+        "edge-cloud-integrated",
+        {
+            "data_injection": "edge",
+            "batch_inference": "edge",
+            "speed_inference": "edge",
+            "hybrid_inference": "edge",
+            "model_sync": "edge",
+            "data_sync": "edge",
+            "speed_training": "cloud",
+            "archiving": "cloud",
+        },
+    )
+
+
+ALL_DEPLOYMENTS = {
+    "edge-centric": edge_centric,
+    "cloud-centric": cloud_centric,
+    "edge-cloud-integrated": edge_cloud_integrated,
+}

@@ -1,0 +1,58 @@
+"""Compute-cost calibration and per-window latency accounting.
+
+``CostModel`` holds *measured* wall-times of the real JAX modules on this
+container (LSTM batch/speed inference, speed training, weight solve) and
+rescales them by each site's ``compute_scale``; big-arch costs can instead be
+derived from the roofline terms of the compiled dry-run.  The accounting
+separates computation vs communication per module, which is exactly the
+structure of the paper's Table 3.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclass
+class CostModel:
+    """Seconds, measured on the container at compute_scale=1.0."""
+
+    batch_infer_s: float = 0.05
+    speed_infer_s: float = 0.05
+    hybrid_combine_s: float = 0.005
+    weight_solve_s: float = 0.01  # dynamic only
+    speed_train_s: float = 2.0
+    ingest_s: float = 0.0  # Kafka data-injection throttle time charged as
+    # communication on every stream consumer (paper: ~7 records/s)
+    model_nbytes: float = 50_000.0  # checkpoint size (10,981 params ~ 44 KB)
+    window_nbytes: float = 200 * 5 * 4  # records/window * features * f32
+    result_nbytes: float = 200 * 4
+    # memory footprint of a training job (for the capacity model)
+    train_memory_bytes: float = 6e9  # TF/Spark stack on the Pi blows 4 GB
+    infer_memory_bytes: float = 0.5e9
+
+    def on(self, site_scale: float, seconds: float) -> float:
+        return seconds / max(site_scale, 1e-9)
+
+
+@dataclass
+class LatencyLedger:
+    """Accumulates (computation, communication) seconds per (module, window)."""
+
+    comp: Dict[str, list] = field(default_factory=dict)
+    comm: Dict[str, list] = field(default_factory=dict)
+
+    def add(self, module: str, comp_s: float = 0.0, comm_s: float = 0.0):
+        self.comp.setdefault(module, []).append(comp_s)
+        self.comm.setdefault(module, []).append(comm_s)
+
+    def table(self) -> Dict[str, Dict[str, float]]:
+        out = {}
+        mods = set(self.comp) | set(self.comm)
+        for m in sorted(mods):
+            c = float(np.mean(self.comp.get(m, [0.0])))
+            x = float(np.mean(self.comm.get(m, [0.0])))
+            out[m] = {"computation": c, "communication": x, "total": c + x}
+        return out

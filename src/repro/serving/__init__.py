@@ -1,0 +1,2 @@
+from repro.serving.batching import BatchScheduler, Request, Slot  # noqa: F401
+from repro.serving.engine import Engine, ServeStats, greedy_sample  # noqa: F401

@@ -1,0 +1,77 @@
+"""Request batching for the serving engine.
+
+The paper's edge performs per-window batched inference; a production serving
+plane needs continuous batching: requests arrive asynchronously, are admitted
+into fixed slots, and finished slots are recycled.  This scheduler is
+deterministic (driven by the runtime simulator's clock or by arrival order).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int
+    arrived_at: float = 0.0
+    # filled by the engine
+    generated: List[int] = field(default_factory=list)
+    finished_at: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+@dataclass
+class Slot:
+    request: Optional[Request] = None
+    pos: int = 0  # next decode position (absolute)
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+
+class BatchScheduler:
+    """Fixed-slot continuous batcher."""
+
+    def __init__(self, n_slots: int):
+        self.slots = [Slot() for _ in range(n_slots)]
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def admit(self) -> List[int]:
+        """Move queued requests into free slots; returns slot ids admitted
+        (these need a prefill before decoding)."""
+        admitted = []
+        for i, s in enumerate(self.slots):
+            if s.free and self.queue:
+                s.request = self.queue.pop(0)
+                s.pos = len(s.request.prompt)
+                admitted.append(i)
+        return admitted
+
+    def active(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if not s.free]
+
+    def retire_finished(self, now: float = 0.0) -> List[Request]:
+        done = []
+        for s in self.slots:
+            if s.request is not None and s.request.done:
+                s.request.finished_at = now
+                done.append(s.request)
+                s.request = None
+                s.pos = 0
+        return done
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(s.free for s in self.slots)

@@ -1,0 +1,3 @@
+from repro.streams.injection import DataInjection, ThrottleConfig, stream_windows  # noqa: F401
+from repro.streams.normalize import MinMaxScaler  # noqa: F401
+from repro.streams import sources  # noqa: F401

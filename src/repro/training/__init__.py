@@ -1,0 +1,3 @@
+from repro.training.optimizer import Optimizer, OptState, adamw, sgd, warmup_cosine  # noqa: F401
+from repro.training.train_loop import fit, make_eval_step, make_train_step  # noqa: F401
+from repro.training import checkpoint  # noqa: F401

@@ -1,0 +1,85 @@
+"""npz checkpointing with path-flattened keys.
+
+This is the artifact that the paper synchronizes edge<->cloud via a
+pre-signed S3 URL: the runtime's model-sync message carries a
+``CheckpointHandle`` (path + nbytes) and the link model charges
+``nbytes / bandwidth`` for the transfer.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "::"
+BF16_TAG = "__bf16__"  # numpy can't persist ml_dtypes.bfloat16; store u16 view
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+
+    def visit(path, x):
+        keys = []
+        for p in path:
+            keys.append(str(getattr(p, "key", getattr(p, "idx", p))))
+        arr = np.asarray(x)
+        key = SEP.join(keys)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+            key = BF16_TAG + key
+        flat[key] = arr
+        return x
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return flat
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> Any:
+    tree: Dict[str, Any] = {}
+    for k, v in flat.items():
+        if k.startswith(BF16_TAG):
+            k = k[len(BF16_TAG):]
+            v = jnp.asarray(v.view(jnp.bfloat16))
+        parts = k.split(SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(v)
+    return tree
+
+
+@dataclass(frozen=True)
+class CheckpointHandle:
+    path: str
+    nbytes: int
+    step: int = 0
+    meta: Optional[Dict[str, Any]] = None
+
+
+def save(path: str, tree: Any, step: int = 0,
+         meta: Optional[Dict[str, Any]] = None) -> CheckpointHandle:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    full = path if path.endswith(".npz") else path + ".npz"
+    if meta is not None or step:
+        with open(full + ".json", "w") as f:
+            json.dump({"step": step, "meta": meta or {}}, f)
+    nbytes = sum(v.nbytes for v in flat.values())
+    return CheckpointHandle(path=full, nbytes=nbytes, step=step, meta=meta)
+
+
+def load(path: str) -> Any:
+    full = path if path.endswith(".npz") else path + ".npz"
+    with np.load(full) as z:
+        flat = {k: z[k] for k in z.files}
+    return _unflatten(flat)
+
+
+def nbytes_of(tree: Any) -> int:
+    return sum(int(np.asarray(x).nbytes) for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,131 @@
+"""Pure-JAX optimizers (no optax in this container).
+
+AdamW with optional cosine/linear warmup schedules, gradient clipping by
+global norm, and f32 moment accumulators regardless of param dtype (the
+moments are the FSDP-sharded bulk of optimizer memory at kimi-k2 scale).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Params
+    nu: Params
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], OptState]
+    update: Callable[[Params, OptState, Params], Tuple[Params, OptState, Dict]]
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, final_frac: float = 0.1
+                  ) -> Schedule:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves))
+
+
+def adamw(
+    lr: Union[float, Schedule],
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    clip_norm: Optional[float] = 1.0,
+    moment_dtype=jnp.float32,
+) -> Optimizer:
+    """moment_dtype=bfloat16 halves optimizer HBM — the capacity fix that
+    lets the 1T-param MoE config hold AdamW state (EXPERIMENTS.md §Dry-run);
+    the update math still runs in f32."""
+    sched: Schedule = lr if callable(lr) else constant(lr)
+    mdt = jnp.dtype(moment_dtype)
+
+    def init(params: Params) -> OptState:
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, mdt), params
+        )
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                        nu=jax.tree_util.tree_map(jnp.copy, zeros))
+
+    def update(grads: Params, state: OptState, params: Params):
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        scale = jnp.ones((), jnp.float32)
+        if clip_norm is not None:
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m2 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v2 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            mhat = m2 / (1 - b1 ** step.astype(jnp.float32))
+            vhat = v2 / (1 - b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay > 0:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - sched(step) * delta
+            return p2.astype(p.dtype), m2.astype(mdt), v2.astype(mdt)
+
+        out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+        params2 = jax.tree_util.tree_map(lambda t: t[0], out,
+                                         is_leaf=lambda t: isinstance(t, tuple))
+        mu2 = jax.tree_util.tree_map(lambda t: t[1], out,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+        nu2 = jax.tree_util.tree_map(lambda t: t[2], out,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+        metrics = {"grad_norm": gnorm, "lr": sched(step)}
+        return params2, OptState(step, mu2, nu2), metrics
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: Union[float, Schedule], momentum: float = 0.0) -> Optimizer:
+    sched: Schedule = lr if callable(lr) else constant(lr)
+
+    def init(params: Params) -> OptState:
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=zeros)
+
+    def update(grads: Params, state: OptState, params: Params):
+        step = state.step + 1
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            m2 = momentum * m + g
+            p2 = p.astype(jnp.float32) - sched(step) * m2
+            return p2.astype(p.dtype), m2
+
+        out = jax.tree_util.tree_map(upd, grads, state.mu, params)
+        params2 = jax.tree_util.tree_map(lambda t: t[0], out,
+                                         is_leaf=lambda t: isinstance(t, tuple))
+        mu2 = jax.tree_util.tree_map(lambda t: t[1], out,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+        return params2, OptState(step, mu2, state.nu), {"grad_norm": global_norm(grads)}
+
+    return Optimizer(init=init, update=update)

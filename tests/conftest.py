@@ -1,0 +1,12 @@
+import os
+import sys
+
+# tests must see ONE cpu device (the dry-run alone forces 512); keep any
+# inherited flag from leaking in
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

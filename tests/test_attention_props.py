@@ -1,0 +1,115 @@
+"""Hypothesis property tests on the attention substrate's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import attend, attend_full_ref
+
+
+@st.composite
+def attn_case(draw):
+    B = draw(st.integers(1, 2))
+    Sq = draw(st.integers(1, 24))
+    Sk = draw(st.integers(1, 40))
+    Hkv = draw(st.sampled_from([1, 2]))
+    G = draw(st.sampled_from([1, 2, 4]))
+    D = draw(st.sampled_from([4, 8]))
+    causal = draw(st.booleans())
+    window = draw(st.sampled_from([0, 4, 16]))
+    chunk = draw(st.sampled_from([4, 8, 64]))
+    seed = draw(st.integers(0, 2**16))
+    return B, Sq, Sk, Hkv, G, D, causal, window, chunk, seed
+
+
+@given(attn_case())
+@settings(max_examples=25, deadline=None)
+def test_chunked_equals_reference(case):
+    B, Sq, Sk, Hkv, G, D, causal, window, chunk, seed = case
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hkv * G, D))
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, D))
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, D))
+    # decode-style positions: queries continue after the keys
+    q_pos = jnp.broadcast_to(jnp.arange(Sk, Sk + Sq), (B, Sq)) \
+        if causal else jnp.zeros((B, Sq), jnp.int32)
+    kv_pos = jnp.broadcast_to(jnp.arange(Sk), (B, Sk))
+    o1 = attend(q, k, v, q_pos, kv_pos, causal=causal, window=window,
+                chunk=chunk)
+    o2 = attend_full_ref(q, k, v, q_pos, kv_pos, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_invalid_slots_are_ignored():
+    """kv_pos = -1 slots must contribute nothing (ring-buffer invariant)."""
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    B, S, H, D = 1, 8, 2, 4
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    q_pos = jnp.full((B, 1), 100, jnp.int32)
+    kv_pos = jnp.where(jnp.arange(S)[None] < 4, jnp.arange(S)[None],
+                       -1).astype(jnp.int32)
+    o_masked = attend(q, k, v, q_pos, kv_pos, causal=True, chunk=4)
+    o_trunc = attend(q, k[:, :4], v[:, :4], q_pos, kv_pos[:, :4],
+                     causal=True, chunk=4)
+    np.testing.assert_allclose(np.asarray(o_masked), np.asarray(o_trunc),
+                               atol=1e-6)
+
+
+def test_window_equals_truncated_keys():
+    """SWA masking == physically truncating old keys."""
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    B, S, H, D, W = 1, 32, 2, 8, 8
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q_pos = jnp.full((B, 1), S - 1, jnp.int32)
+    o_win = attend(q, k, v, q_pos, pos, causal=True, window=W, chunk=8)
+    lo = S - W
+    o_cut = attend(q, k[:, lo:], v[:, lo:], q_pos, pos[:, lo:], causal=True,
+                   chunk=8)
+    np.testing.assert_allclose(np.asarray(o_win), np.asarray(o_cut),
+                               atol=1e-6)
+
+
+def test_softmax_rows_sum_to_one_effectively():
+    """With all-equal V, attention returns exactly V regardless of masks."""
+    B, Sq, Sk, H, D = 1, 4, 16, 2, 4
+    q = jax.random.normal(jax.random.PRNGKey(2), (B, Sq, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(3), (B, Sk, H, D))
+    v = jnp.ones((B, Sk, H, D)) * 3.5
+    q_pos = jnp.broadcast_to(jnp.arange(Sk, Sk + Sq), (B, Sq))
+    kv_pos = jnp.broadcast_to(jnp.arange(Sk), (B, Sk))
+    o = attend(q, k, v, q_pos, kv_pos, causal=True, chunk=4)
+    np.testing.assert_allclose(np.asarray(o), 3.5, atol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "zamba2-1.2b",
+                                  "seamless-m4t-medium"])
+def test_engine_generate_more_archs(arch):
+    """Serving engine works across model families, not just dense."""
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.serving import Engine
+
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, max_len=24)
+    prompts = np.random.default_rng(0).integers(
+        1, cfg.vocab_size, (2, 8), dtype=np.int32)
+    prefix = None
+    if cfg.frontend is not None:
+        prefix = np.random.default_rng(1).normal(
+            0, 0.02, (2, cfg.frontend.n_prefix_tokens,
+                      cfg.frontend.embed_dim)).astype(np.float32)
+    out, stats = engine.generate(prompts, 5, prefix_embed=prefix)
+    assert out.shape == (2, 5)
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()

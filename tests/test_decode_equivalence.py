@@ -1,0 +1,117 @@
+"""Decode-path correctness: step-by-step decoding with the KV/state cache
+must reproduce the logits of a single full forward pass over the same tokens
+(teacher forcing).  This is the strongest serving invariant we have."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import blocks, get_model
+
+ARCHS = ["tinyllama-1.1b", "h2o-danube-3-4b", "grok-1-314b", "rwkv6-3b",
+         "zamba2-1.2b", "seamless-m4t-medium"]
+
+
+def full_logits(cfg, params, batch):
+    """All-position logits from the training forward pass."""
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        from repro.models import transformer as m
+
+        h, _ = m.forward(cfg, params, batch)
+        n_prefix = h.shape[1] - batch["tokens"].shape[1]
+        if n_prefix > 0:
+            h = h[:, n_prefix:]
+        return blocks.logits_fn(cfg, params, h)
+    if fam == "ssm":
+        from repro.models import rwkv as m
+
+        h, _, _ = m.forward(cfg, params, batch)
+        return blocks.logits_fn(cfg, params, h)
+    if fam == "hybrid":
+        from repro.models import hybrid_arch as m
+
+        h, _ = m.forward(cfg, params, batch)
+        return blocks.logits_fn(cfg, params, h)
+    if fam == "audio":
+        from repro.models import encdec as m
+
+        memory = m.encode(cfg, params, batch["prefix_embed"])
+        h, _ = m._decoder_seq(cfg, params, batch["tokens"], memory)
+        return blocks.logits_fn(cfg, params, h)
+    raise ValueError(fam)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_full_forward(arch):
+    import dataclasses
+
+    cfg = get_config(arch).reduced().replace(attn_chunk=16)
+    if cfg.moe is not None:
+        # equivalence holds when no tokens are dropped: raise the reference
+        # forward's capacity to worst case (serving paths are no-drop)
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    B, S_pre, S_dec = 2, 8, 6
+    S = S_pre + S_dec
+    tokens = jax.random.randint(key, (B, S), 1, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.frontend is not None:
+        batch["prefix_embed"] = (
+            jax.random.normal(
+                key, (B, cfg.frontend.n_prefix_tokens, cfg.frontend.embed_dim)
+            )
+            * 0.02
+        )
+
+    ref = np.asarray(full_logits(cfg, params, batch))  # (B, S, V)
+
+    n_prefix = (cfg.frontend.n_prefix_tokens
+                if cfg.family == "vlm" and cfg.frontend else 0)
+    pre_batch = dict(batch, tokens=tokens[:, :S_pre])
+    logits, cache = model.prefill(params, pre_batch, S + n_prefix)
+    np.testing.assert_allclose(
+        np.asarray(logits), ref[:, S_pre - 1], atol=2e-3, rtol=2e-3,
+        err_msg=f"{arch}: prefill logits mismatch",
+    )
+    for i in range(S_dec):
+        pos = jnp.full((B,), S_pre + i + n_prefix, jnp.int32)
+        tok = tokens[:, S_pre + i : S_pre + i + 1]
+        logits, cache = model.decode_step(params, {"token": tok, "pos": pos},
+                                          cache)
+        np.testing.assert_allclose(
+            np.asarray(logits), ref[:, S_pre + i], atol=2e-3, rtol=2e-3,
+            err_msg=f"{arch}: decode step {i} logits mismatch",
+        )
+
+
+def test_swa_ring_buffer_decode():
+    """SWA decode with a ring-buffer cache smaller than the sequence must
+    match the full forward pass (window masking equivalence)."""
+    cfg = get_config("h2o-danube-3-4b").reduced().replace(
+        window_size=8, attn_chunk=8)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    B, S_pre, S_dec = 1, 10, 8
+    S = S_pre + S_dec
+    tokens = jax.random.randint(key, (B, S), 1, cfg.vocab_size)
+    ref = np.asarray(full_logits(cfg, params, {"tokens": tokens}))
+
+    logits, cache = model.prefill(params, {"tokens": tokens[:, :S_pre]}, S)
+    assert cache["k"].shape[2] == cfg.window_size  # ring buffer size
+    np.testing.assert_allclose(np.asarray(logits), ref[:, S_pre - 1],
+                               atol=2e-3, rtol=2e-3)
+    for i in range(S_dec):
+        pos = jnp.full((B,), S_pre + i, jnp.int32)
+        tok = tokens[:, S_pre + i : S_pre + i + 1]
+        logits, cache = model.decode_step(params, {"token": tok, "pos": pos},
+                                          cache)
+        np.testing.assert_allclose(
+            np.asarray(logits), ref[:, S_pre + i], atol=2e-3, rtol=2e-3,
+            err_msg=f"SWA decode step {i}",
+        )

@@ -1,0 +1,223 @@
+"""Per-kernel allclose vs ref.py oracles: sweep shapes and dtypes, all in
+interpret mode (the kernel body executes in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ops import gqa_flash
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.lstm_cell.kernel import lstm_cell
+from repro.kernels.lstm_cell.ops import lstm_sequence
+from repro.kernels.lstm_cell.ref import lstm_cell_ref, lstm_sequence_ref
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan
+from repro.kernels.rwkv6_scan.ops import wkv
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+from repro.kernels.ssm_scan.kernel import ssm_scan
+from repro.kernels.ssm_scan.ops import selective_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(
+        atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# lstm_cell
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,F,H", [(4, 5, 40), (128, 5, 40), (33, 7, 16),
+                                   (1, 1, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lstm_cell_sweep(B, F, H, dtype):
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, F), dtype)
+    h = jax.random.normal(ks[1], (B, H), dtype)
+    c = jax.random.normal(ks[2], (B, H), dtype)
+    wx = (jax.random.normal(ks[3], (F, 4 * H)) * 0.2).astype(dtype)
+    wh = (jax.random.normal(ks[4], (H, 4 * H)) * 0.2).astype(dtype)
+    b = (jax.random.normal(ks[5], (4 * H,)) * 0.2).astype(dtype)
+    h1, c1 = lstm_cell(x, h, c, wx, wh, b, interpret=True, block_b=32)
+    h2, c2 = lstm_cell_ref(x, h, c, wx, wh, b)
+    np.testing.assert_allclose(np.asarray(h1, np.float32),
+                               np.asarray(h2, np.float32), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(c1, np.float32),
+                               np.asarray(c2, np.float32), **tol(dtype))
+
+
+def test_lstm_sequence_matches_ref():
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (8, 5, 5))
+    wx = jax.random.normal(ks[1], (5, 160)) * 0.2
+    wh = jax.random.normal(ks[2], (40, 160)) * 0.2
+    b = jax.random.normal(ks[3], (160,)) * 0.2
+    h1 = lstm_sequence(x, wx, wh, b, interpret=True)
+    h2 = lstm_sequence_ref(x, wx, wh, b)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-5,
+                               rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "B,H,S,D,causal,window",
+    [
+        (2, 2, 128, 32, True, 0),
+        (1, 4, 256, 64, True, 0),
+        (2, 2, 100, 32, True, 0),  # ragged
+        (2, 2, 250, 32, True, 64),  # SWA + ragged
+        (1, 2, 77, 16, False, 0),  # non-causal
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, S, D, causal, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, H, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, H, S, D), dtype)
+    o1 = flash_attention(q, k, v, causal=causal, window=window,
+                         block_q=64, block_k=64, interpret=True)
+    o2 = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), **tol(dtype))
+
+
+def test_gqa_flash_matches_model_oracle():
+    from repro.models.attention import attend, attend_full_ref
+
+    B, S, Hq, Hkv, D = 2, 96, 8, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    o_kernel = gqa_flash(q, k, v, causal=True, interpret=True)
+    o_ref = attend_full_ref(q, k, v, pos, pos, causal=True)
+    o_chunked = attend(q, k, v, pos, pos, causal=True, chunk=32)
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(o_chunked), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("BH,T,N,chunk", [(4, 64, 16, 32), (2, 100, 32, 32),
+                                          (3, 17, 8, 8), (1, 256, 64, 128)])
+def test_rwkv6_scan_sweep(BH, T, N, chunk):
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (BH, T, N)) * 0.5
+    k = jax.random.normal(ks[1], (BH, T, N)) * 0.5
+    v = jax.random.normal(ks[2], (BH, T, N)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (BH, T, N))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (BH, N)) * 0.1
+    y1, s1 = rwkv6_scan(r, k, v, w, u, chunk=chunk, interpret=True)
+    y2, s2 = rwkv6_scan_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_wkv_model_layout():
+    B, T, H, N = 2, 40, 3, 16
+    ks = jax.random.split(KEY, 5)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, N)) * 0.5 for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, N))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (H, N)) * 0.1
+    y, s = wkv(r, k, v, w, u, chunk=16, interpret=True)
+    assert y.shape == (B, T, H, N) and s.shape == (B, H, N, N)
+
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, T, N)
+
+    y2, s2 = rwkv6_scan_ref(flat(r), flat(k), flat(v), flat(w),
+                            jnp.broadcast_to(u[None], (B, H, N)).reshape(B * H, N))
+    np.testing.assert_allclose(np.asarray(flat(y)), np.asarray(y2), atol=1e-4,
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("BH,T,P,N,chunk", [(4, 64, 16, 16, 32),
+                                            (2, 90, 32, 16, 32),
+                                            (1, 33, 8, 8, 16)])
+def test_ssm_scan_sweep(BH, T, P, N, chunk):
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (BH, T, P))
+    b = jax.random.normal(ks[1], (BH, T, N)) * 0.3
+    c = jax.random.normal(ks[2], (BH, T, N)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (BH, T)))
+    a = -jnp.exp(jax.random.normal(ks[4], (BH,)))
+    d = jax.random.normal(ks[5], (BH,))
+    y1, s1 = ssm_scan(x, b, c, dt, a, d, chunk=chunk, interpret=True)
+    y2, s2 = ssm_scan_ref(x, b, c, dt, a, d)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4,
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# int8 dequant matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("M,K,N", [(64, 128, 96), (33, 100, 17),
+                                   (1, 40, 160), (128, 512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_matmul_sweep(M, K, N, dtype):
+    from repro.kernels.int8_matmul.kernel import int8_matmul
+    from repro.kernels.int8_matmul.ref import int8_matmul_ref
+
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (M, K), dtype)
+    q = jax.random.randint(ks[1], (K, N), -127, 128).astype(jnp.int8)
+    s = jnp.abs(jax.random.normal(ks[2], (N,))) * 0.01
+    y1 = int8_matmul(x, q, s, block_m=32, block_n=32, block_k=64,
+                     interpret=True)
+    y2 = int8_matmul_ref(x, q, s)
+    # blocked K accumulation reorders the f32 sum; bound relative not exact
+    loose = dict(atol=1e-3, rtol=1e-3) if dtype == jnp.float32 else tol(dtype)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), **loose)
+
+
+def test_qmatmul_matches_dequant_path():
+    from repro.kernels.int8_matmul.ops import qmatmul
+    from repro.serving.quantize import dequantize, quantize
+
+    w = jax.random.normal(KEY, (64, 32))
+    qt = quantize(w)
+    x = jax.random.normal(KEY, (4, 5, 64))
+    y1 = qmatmul(x, qt, interpret=True)
+    y2 = jnp.einsum("...k,kn->...n", x, dequantize(qt))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+def test_selective_scan_model_layout():
+    B, T, H, P, N = 2, 32, 3, 8, 16
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    b = jax.random.normal(ks[1], (B, T, N)) * 0.3
+    c = jax.random.normal(ks[2], (B, T, N)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, T, H)))
+    a = -jnp.exp(jax.random.normal(ks[4], (H,)))
+    d = jax.random.normal(ks[5], (H,))
+    y, s = selective_scan(x, b, c, dt, a, d, chunk=16, interpret=True)
+    assert y.shape == (B, T, H, P) and s.shape == (B, H, P, N)
+    assert bool(jnp.isfinite(y).all())

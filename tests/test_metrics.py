@@ -1,0 +1,29 @@
+import os
+import tempfile
+
+import numpy as np
+
+from repro.training.metrics import MetricLogger
+
+
+def test_log_and_summary():
+    ml = MetricLogger()
+    for i in range(10):
+        ml.log(i, loss=float(10 - i), lr=1e-3)
+    s = ml.summary()
+    assert s["loss"]["last"] == 1.0 and s["loss"]["max"] == 10.0
+    assert abs(ml.mean("loss") - 5.5) < 1e-9
+    assert ml.mean("loss", last_n=2) == 1.5
+    assert len(ml.series("lr")) == 10
+
+
+def test_jsonl_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "m", "train.jsonl")
+        ml = MetricLogger(path=path)
+        ml.log(0, loss=3.0, note="warmup")
+        ml.log(1, loss=2.0)
+        ml.close()
+        back = MetricLogger.read(path)
+        assert back.series("loss") == [3.0, 2.0]
+        assert back._rows[0]["note"] == "warmup"

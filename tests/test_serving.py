@@ -1,0 +1,94 @@
+"""Serving engine + batching + drift detector tests."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.drift import PageHinkleyDetector, adf_test, window_mean_shift
+from repro.models import get_model
+from repro.serving import BatchScheduler, Engine, Request
+from repro.streams.sources import wind_turbine_series
+
+
+def test_engine_generate_greedy_deterministic():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, max_len=32)
+    prompts = np.random.default_rng(0).integers(1, cfg.vocab_size, (2, 8),
+                                                dtype=np.int32)
+    out1, stats = engine.generate(prompts, 6)
+    out2, _ = engine.generate(prompts, 6)
+    assert out1.shape == (2, 6)
+    np.testing.assert_array_equal(out1, out2)
+    assert stats.prefill_s > 0 and stats.tokens_out == 12
+
+
+def test_batch_scheduler_slots():
+    s = BatchScheduler(2)
+    reqs = [Request(uid=i, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=2) for i in range(3)]
+    for r in reqs:
+        s.submit(r)
+    admitted = s.admit()
+    assert admitted == [0, 1]
+    assert s.active() == [0, 1]
+    # finish slot 0's request
+    s.slots[0].request.generated = [1, 2]
+    done = s.retire_finished(now=1.0)
+    assert len(done) == 1 and done[0].uid == 0
+    assert s.admit() == [0]  # third request admitted into freed slot
+    assert not s.idle
+
+
+def test_engine_serve_continuous_batching():
+    """Wave batching drains a queue larger than the slot count, honoring
+    per-request max_new_tokens and varying prompt lengths."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, max_len=48)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(uid=i,
+                prompt=rng.integers(1, cfg.vocab_size, (4 + 3 * (i % 3),),
+                                    dtype=np.int32),
+                max_new_tokens=2 + (i % 4))
+        for i in range(5)
+    ]
+    done = engine.serve(list(reqs), n_slots=2)
+    assert len(done) == 5
+    assert {r.uid for r in done} == set(range(5))
+    for r in done:
+        assert len(r.generated) == r.max_new_tokens
+        assert all(0 <= t < cfg.vocab_size for t in r.generated)
+
+
+def test_adf_stationary_vs_random_walk():
+    rng = np.random.default_rng(0)
+    stationary = wind_turbine_series(4000, seed=0)[:, 0]
+    res = adf_test(stationary)
+    walk = np.cumsum(rng.normal(0, 1, 4000))
+    res_walk = adf_test(walk)
+    assert res.statistic < res_walk.statistic
+    assert res.stationary_5pct
+    assert not res_walk.stationary_5pct
+    assert res.pvalue < 0.05 < res_walk.pvalue
+
+
+def test_page_hinkley_detects_shift():
+    det = PageHinkleyDetector(delta=0.01, threshold=1.5)
+    rng = np.random.default_rng(0)
+    fired_early = any(det.update(x) for x in rng.normal(0, 0.02, 300))
+    fired_late = any(det.update(x) for x in rng.normal(2.0, 0.02, 100))
+    assert not fired_early
+    assert fired_late
+
+
+def test_window_mean_shift():
+    rng = np.random.default_rng(0)
+    a = rng.normal(0, 1, 500)
+    b = rng.normal(0.05, 1, 500)
+    c = rng.normal(3, 1, 500)
+    assert not window_mean_shift(a, b)
+    assert window_mean_shift(a, c)

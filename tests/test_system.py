@@ -1,0 +1,85 @@
+"""End-to-end behaviour tests for the paper's system: the full hybrid
+stream-analytics pipeline (batch pretrain -> windowed stream -> speed
+re-training -> static/dynamic hybrid inference) on drifting data."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    HybridStreamAnalytics,
+    WindowedStream,
+    WindowPlan,
+    lstm_forecaster,
+    make_supervised,
+    pretrain_batch_model,
+)
+from repro.streams.normalize import MinMaxScaler
+from repro.streams.sources import gradual_drift, wind_turbine_series
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("lstm-paper")
+    series = wind_turbine_series(3200, seed=0)
+    hist, stream_raw = series[:1600], series[1600:]
+    stream = gradual_drift(stream_raw, alphas=np.full(5, 1.5e-3), seed=1)
+    scaler = MinMaxScaler.fit(hist)
+    fc_batch = lstm_forecaster(cfg, epochs=8, batch_size=256)
+    fc_speed = lstm_forecaster(cfg, epochs=15, batch_size=64)
+    bp, _ = pretrain_batch_model(
+        fc_batch, make_supervised(scaler.transform(hist), 5, 0),
+        jax.random.PRNGKey(0))
+    plan = WindowPlan(n_windows=6, records_per_window=250, lag=5)
+    ws = WindowedStream(scaler.transform(stream), plan)
+    return cfg, fc_speed, bp, ws
+
+
+def run_mode(setup, mode, solver="closed_form"):
+    cfg, fc_speed, bp, ws = setup
+    h = HybridStreamAnalytics(fc_speed, mode=mode, dwa_solver=solver)
+    return h.run(ws, bp, jax.random.PRNGKey(1))
+
+
+def test_speed_beats_batch_under_drift(setup):
+    res = run_mode(setup, "speed")
+    m = res.mean_rmse()
+    assert m["speed"] < m["batch"], m
+
+
+def test_dynamic_hybrid_close_to_best(setup):
+    """Dynamic hybrid RMSE must be within a small margin of the best
+    constituent (and strictly better than the worst)."""
+    res = run_mode(setup, "dynamic")
+    m = res.mean_rmse()
+    best = min(m["speed"], m["batch"])
+    worst = max(m["speed"], m["batch"])
+    assert m["hybrid"] <= best * 1.10
+    assert m["hybrid"] < worst
+
+
+def test_dynamic_beats_static_extremes(setup):
+    r_dyn = run_mode(setup, "dynamic").mean_rmse()["hybrid"]
+    r_30 = run_mode(setup, ("static", 0.3)).mean_rmse()["hybrid"]
+    # with drift, a batch-heavy static mix should lose to dynamic
+    assert r_dyn < r_30
+
+
+def test_dwa_solvers_agree_end_to_end(setup):
+    r_cf = run_mode(setup, "dynamic", solver="closed_form")
+    r_sp = run_mode(setup, "dynamic", solver="scipy")
+    a = r_cf.mean_rmse()["hybrid"]
+    b = r_sp.mean_rmse()["hybrid"]
+    assert abs(a - b) / max(a, b) < 0.02
+    # per-window weights close
+    for rc, rs in zip(r_cf.records, r_sp.records):
+        assert abs(rc.w_speed - rs.w_speed) < 0.02
+
+
+def test_window_records_complete(setup):
+    res = run_mode(setup, "dynamic")
+    assert len(res.records) == 5  # windows 1..5 (first trains only)
+    for r in res.records:
+        assert np.isfinite([r.rmse_batch, r.rmse_speed, r.rmse_hybrid]).all()
+        assert 0 <= r.w_speed <= 1 and abs(r.w_speed + r.w_batch - 1) < 1e-9
+        assert r.t_speed_train > 0

@@ -1,0 +1,97 @@
+"""DWA / weighting tests incl. hypothesis property tests on the invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.weighting import (
+    _project_simplex,
+    combine,
+    dwa_closed_form,
+    dwa_jax,
+    dwa_scipy,
+    rmse,
+    static_weights,
+)
+
+
+def _problem(seed, n=128, k=2):
+    rng = np.random.default_rng(seed)
+    y = rng.normal(0, 1, n)
+    preds = [y + rng.normal(0, 0.2 + 0.5 * i, n) + 0.1 * i for i in range(k)]
+    return preds, y
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_solvers_agree(seed):
+    preds, y = _problem(seed)
+    w_sp = dwa_scipy(preds, y)
+    ws, wb = dwa_closed_form(preds[0], preds[1], y)
+    w_j = np.asarray(dwa_jax(jnp.stack([jnp.asarray(p) for p in preds]),
+                             jnp.asarray(y)))
+    assert abs(w_sp[0] - ws) < 1e-3
+    assert abs(w_j[0] - ws) < 5e-3
+    assert abs(sum(w_sp) - 1) < 1e-6 and abs(ws + wb - 1) < 1e-12
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_dwa_beats_static_on_fit_window(seed):
+    """On the window it optimizes, DWA RMSE <= any static weighting."""
+    preds, y = _problem(seed)
+    ws, wb = dwa_closed_form(preds[0], preds[1], y)
+    r_dyn = rmse(y, combine(preds, [ws, wb]))
+    for w in (0.0, 0.3, 0.5, 0.7, 1.0):
+        r_stat = rmse(y, combine(preds, [w, 1 - w]))
+        assert r_dyn <= r_stat + 1e-9
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_closed_form_weights_valid(seed):
+    preds, y = _problem(seed)
+    ws, wb = dwa_closed_form(preds[0], preds[1], y)
+    assert 0.0 <= ws <= 1.0 and 0.0 <= wb <= 1.0
+    assert abs(ws + wb - 1.0) < 1e-12
+
+
+@given(
+    st.lists(st.floats(-10, 10), min_size=2, max_size=8),
+)
+@settings(max_examples=50, deadline=None)
+def test_simplex_projection(v):
+    w = np.asarray(_project_simplex(jnp.asarray(v, jnp.float32)))
+    assert (w >= -1e-6).all()
+    assert abs(w.sum() - 1.0) < 1e-4
+    # projection of a simplex point is itself
+    if len(v) == 2:
+        p = jnp.asarray([0.25, 0.75], jnp.float32)
+        w2 = np.asarray(_project_simplex(p))
+        np.testing.assert_allclose(w2, [0.25, 0.75], atol=1e-6)
+
+
+def test_static_weights():
+    assert static_weights(0.3) == (0.3, 0.7)
+    with pytest.raises(AssertionError):
+        static_weights(1.5)
+
+
+def test_dwa_degenerate_identical_preds():
+    y = np.zeros(16)
+    p = np.ones(16)
+    ws, wb = dwa_closed_form(p, p, y)
+    assert ws == 0.5 and wb == 0.5
+
+
+def test_dwa_k3_scipy():
+    rng = np.random.default_rng(0)
+    y = rng.normal(0, 1, 64)
+    preds = [y + rng.normal(0, s, 64) for s in (0.1, 0.5, 1.0)]
+    w = dwa_scipy(preds, y)
+    assert len(w) == 3 and abs(w.sum() - 1) < 1e-6
+    assert w[0] > w[2]  # best model gets most weight
+    wj = np.asarray(dwa_jax(jnp.stack([jnp.asarray(p) for p in preds]),
+                            jnp.asarray(y), n_steps=500))
+    r_sp = rmse(y, combine(preds, w))
+    r_j = rmse(y, combine(preds, wj))
+    assert abs(r_sp - r_j) < 5e-3

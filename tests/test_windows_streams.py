@@ -1,0 +1,98 @@
+"""Window manager, supervised construction, scaler and injection tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.windows import WindowedStream, WindowPlan, make_supervised
+from repro.streams import DataInjection, MinMaxScaler, ThrottleConfig
+from repro.streams.injection import stream_windows
+from repro.streams.sources import abrupt_drift, gradual_drift, wind_turbine_series
+
+
+def test_make_supervised_alignment():
+    series = np.arange(20, dtype=np.float32)[:, None]
+    d = make_supervised(series, lag=5, target_col=0)
+    assert d["x"].shape == (15, 5, 1) and d["y"].shape == (15, 1)
+    # y_i follows its lag window
+    np.testing.assert_allclose(d["x"][0, :, 0], [0, 1, 2, 3, 4])
+    np.testing.assert_allclose(d["y"][0], [5])
+    np.testing.assert_allclose(d["x"][-1, :, 0], [14, 15, 16, 17, 18])
+    np.testing.assert_allclose(d["y"][-1], [19])
+
+
+@given(st.integers(6, 200), st.integers(1, 5), st.integers(1, 4))
+@settings(max_examples=30, deadline=None)
+def test_make_supervised_shapes(T, lag, F):
+    series = np.random.default_rng(0).normal(size=(T, F)).astype(np.float32)
+    d = make_supervised(series, lag)
+    n = max(T - lag, 0)
+    assert d["x"].shape == (n, lag, F)
+    assert d["y"].shape == (n, 1)
+
+
+def test_windowed_stream_boundary_context():
+    """Window t>0 must include lag records of left context so no samples
+    are lost at window boundaries."""
+    series = np.arange(100, dtype=np.float32)[:, None]
+    ws = WindowedStream(series, WindowPlan(n_windows=4, records_per_window=25, lag=5))
+    assert len(ws) == 4
+    d1 = ws.supervised(1)
+    # first sample of window 1 predicts record 25 from records 20..24
+    np.testing.assert_allclose(d1["x"][0, :, 0], [20, 21, 22, 23, 24])
+    np.testing.assert_allclose(d1["y"][0], [25])
+    assert len(d1["y"]) == 25  # full window coverage
+
+
+def test_minmax_scaler_roundtrip():
+    rng = np.random.default_rng(0)
+    x = rng.normal(10, 5, (200, 3)).astype(np.float32)
+    sc = MinMaxScaler.fit(x)
+    z = sc.transform(x)
+    assert z.min() >= -1e-6 and z.max() <= 1 + 1e-6
+    back = sc.inverse(z)
+    np.testing.assert_allclose(back, x, rtol=1e-4, atol=1e-3)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_minmax_scaler_bounds(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, rng.uniform(0.1, 10), (50, 2)).astype(np.float32)
+    sc = MinMaxScaler.fit(x)
+    z = sc.transform(x)
+    assert np.all(z >= -1e-5) and np.all(z <= 1 + 1e-5)
+
+
+def test_data_injection_throttle():
+    inj = DataInjection(ThrottleConfig(min_records=10, max_buffer=15))
+    rng = np.random.default_rng(0)
+    inj.push(rng.normal(size=(8, 3)))
+    assert not inj.ready() and inj.emit() is None
+    inj.push(rng.normal(size=(4, 3)))
+    assert inj.ready()
+    out = inj.emit()
+    assert out.shape == (12, 3)
+    assert inj.emitted_windows == 1
+    # overflow drops oldest
+    inj.push(rng.normal(size=(20, 3)))
+    assert inj.dropped == 5
+
+
+def test_stream_windows_chop():
+    s = np.zeros((103, 2), np.float32)
+    ws = stream_windows(s, 25)
+    assert len(ws) == 4 and all(w.shape == (25, 2) for w in ws)
+
+
+def test_drift_generators():
+    base = wind_turbine_series(2000, seed=0)
+    g = gradual_drift(base, seed=1)
+    a = abrupt_drift(base, seed=2)
+    assert g.shape == base.shape and a.shape == base.shape
+    # gradual drift grows with t: late-window mean exceeds base's by the trend
+    delta = (g[-500:] - base[-500:]).mean() - (g[:500] - base[:500]).mean()
+    assert delta > 0.1
+    # abrupt drift changes level at switch points (std of windowed mean diff)
+    dd = (a - base).mean(axis=1)
+    assert np.std(dd[1:] - dd[:-1]) >= 0.0  # exists and finite
+    assert np.isfinite(a).all() and np.isfinite(g).all()
