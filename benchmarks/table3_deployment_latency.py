@@ -1,6 +1,19 @@
 """Paper Table 3: inference-phase latency (computation/communication/total)
 for batch / speed / hybrid inference under the three deployment modalities,
 plus the training-phase latency and the edge-centric OOM reproduction.
+
+Two ways to produce the numbers:
+
+* calibrated — the discrete-event simulation replays ``CostModel`` constants
+  measured once by ``benchmarks.calibrate`` (the original path);
+* measured — the ``BusExecutor`` schedules the real pipeline stages on the
+  TopicBus and accounts each stage's actual wall-clock, rescaled by site
+  ``compute_scale`` (plus site-occupancy queueing the calibrated path cannot
+  see).
+
+``report(measured=True)`` prints both side by side; they should agree on the
+paper's *orderings* (that is the point of calibration) while the measured
+column is the ground truth for this container.
 """
 from __future__ import annotations
 
@@ -8,6 +21,7 @@ from typing import Dict
 
 from benchmarks.calibrate import Calibration, calibrate
 from repro.runtime import (
+    ALL_DEPLOYMENTS,
     EdgeCloudSimulation,
     cloud_centric,
     edge_centric,
@@ -18,8 +32,20 @@ from repro.runtime import (
 ROWS = ("speed_inference", "batch_inference", "hybrid_inference")
 
 
+def _summarize(table, failures, e2e=None) -> dict:
+    return {
+        "rows": {m: table.get(m, {}) for m in ROWS},
+        "training": table.get("speed_training", {}),
+        "model_sync_comm": table.get("model_sync", {}).get("communication", 0.0),
+        "failures": len(failures),
+        "oom": bool(failures),
+        "e2e_s": e2e,
+    }
+
+
 def run(cal: Calibration | None = None, n_windows: int = 25,
         fast: bool = False) -> Dict[str, dict]:
+    """Calibrated simulation (CostModel replay)."""
     cal = cal or calibrate(fast=fast)
     topo = paper_topology()
     out = {}
@@ -27,20 +53,58 @@ def run(cal: Calibration | None = None, n_windows: int = 25,
         dep = factory()
         sim = EdgeCloudSimulation(dep, topo, cal.cost, dynamic_weighting=True)
         res = sim.run(n_windows)
-        t = res.table3()
-        out[dep.name] = {
-            "rows": {m: t.get(m, {}) for m in ROWS},
-            "training": t.get("speed_training", {}),
-            "model_sync_comm": t.get("model_sync", {}).get("communication", 0.0),
-            "failures": len(res.failures),
-            "oom": bool(res.failures),
-        }
+        out[dep.name] = _summarize(res.table3(), res.failures)
     return out
 
 
-def report(fast: bool = False) -> str:
-    res = run(fast=fast)
-    lines = ["# Table 3 analog: inference-phase latency per deployment (s)"]
+def run_measured(n_windows: int = 5, fast: bool = True) -> Dict[str, dict]:
+    """Real LSTM compute scheduled on the TopicBus by the BusExecutor.
+    Experiment definition is shared with the launcher's ``--real`` mode
+    (``repro.launch.edge_cloud.build_real_pipeline``)."""
+    import jax
+
+    from repro.launch.edge_cloud import build_real_pipeline
+    from repro.runtime import BusExecutor
+
+    stages, bp, stream, cost = build_real_pipeline(n_windows, fast=fast)
+
+    out = {}
+    for name in ("cloud-centric", "edge-centric", "edge-cloud-integrated"):
+        ex = BusExecutor(stages, ALL_DEPLOYMENTS[name](), paper_topology(),
+                         cost)
+        res = ex.run(stream, bp, jax.random.PRNGKey(1))
+        out[name] = _summarize(res.table3(), res.failures,
+                               e2e=res.mean_e2e_s())
+    return out
+
+
+def _claim_checks(res: Dict[str, dict]) -> Dict[str, bool]:
+    tot = {d: sum(r["rows"][m].get("total", 0) for m in ROWS)
+           for d, r in res.items()}
+    checks = {
+        "cloud_comm>edge_comm (inference)": (
+            res["cloud-centric"]["rows"]["batch_inference"]["communication"]
+            > res["edge-cloud-integrated"]["rows"]["batch_inference"]["communication"]
+        ),
+        "edge_centric_training_OOM": res["edge-centric"]["oom"],
+        "integrated_beats_edge_centric_total": (
+            tot["edge-cloud-integrated"] < tot["edge-centric"]
+        ),
+        "integrated_trains_without_capacity_limits": (
+            not res["edge-cloud-integrated"]["oom"]
+        ),
+    }
+    e2e = {d: r.get("e2e_s") for d, r in res.items()}
+    if all(v is not None for v in e2e.values()):
+        checks["e2e: integrated < cloud < edge"] = (
+            e2e["edge-cloud-integrated"] < e2e["cloud-centric"]
+            < e2e["edge-centric"]
+        )
+    return checks
+
+
+def _render(res: Dict[str, dict], title: str) -> list:
+    lines = [f"# Table 3 analog ({title}): inference-phase latency per deployment (s)"]
     lines.append(f"{'deployment':<24}{'module':<18}{'comp':>8}{'comm':>8}{'total':>8}")
     for dep, r in res.items():
         for m in ROWS:
@@ -58,27 +122,28 @@ def report(fast: bool = False) -> str:
                 f"{tr.get('communication', 0) + r['model_sync_comm']:>8.2f}"
                 f"{tr.get('total', 0) + r['model_sync_comm']:>8.2f}"
             )
-    # paper-claim checks
-    tot = {d: sum(r["rows"][m].get("total", 0) for m in ROWS)
-           for d, r in res.items()}
-    checks = {
-        "cloud_comm>edge_comm (inference)": (
-            res["cloud-centric"]["rows"]["batch_inference"]["communication"]
-            > res["edge-cloud-integrated"]["rows"]["batch_inference"]["communication"]
-        ),
-        "edge_centric_training_OOM": res["edge-centric"]["oom"],
-        "integrated_beats_edge_centric_total": (
-            tot["edge-cloud-integrated"] < tot["edge-centric"]
-        ),
-        "integrated_trains_without_capacity_limits": (
-            not res["edge-cloud-integrated"]["oom"]
-        ),
-    }
-    lines.append("\n# paper-claim checks")
-    for k, v in checks.items():
+        if r.get("e2e_s") is not None:
+            lines.append(f"{dep:<24}{'e2e window':<18}{r['e2e_s']:>24.3f}")
+    lines.append(f"\n# paper-claim checks ({title})")
+    for k, v in _claim_checks(res).items():
         lines.append(f"  {k}: {'PASS' if v else 'FAIL'}")
+    return lines
+
+
+def report(fast: bool = False, measured: bool = False,
+           n_windows_measured: int = 5) -> str:
+    lines = _render(run(fast=fast), "calibrated")
+    if measured:
+        lines.append("")
+        lines.extend(_render(run_measured(n_windows=n_windows_measured,
+                                          fast=fast), "measured"))
+        lines.append("\n(calibrated replays CostModel constants; measured is "
+                     "real stage wall-clock on the bus — compare orderings, "
+                     "not absolute seconds)")
     return "\n".join(lines)
 
 
 if __name__ == "__main__":
-    print(report())
+    import sys
+
+    print(report(fast="--fast" in sys.argv, measured="--measured" in sys.argv))

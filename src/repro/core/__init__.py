@@ -8,6 +8,7 @@ from repro.core.hybrid import (  # noqa: F401
     lstm_forecaster,
     pretrain_batch_model,
 )
+from repro.core.stages import PipelineStages, split_chain  # noqa: F401
 from repro.core.weighting import (  # noqa: F401
     combine,
     dwa_closed_form,

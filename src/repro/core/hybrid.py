@@ -12,26 +12,24 @@ Per time window t (paper Fig. 4):
 The orchestrator is generic over ``Forecaster`` so any model-zoo member can
 be the backbone; ``lstm_forecaster`` builds the paper's exact setup
 (batch: 50 epochs x bs 512; speed: 100 epochs x bs 64; lr 1e-3).
+
+The per-window work itself lives in ``repro.core.stages`` as discrete,
+individually-invokable pipeline stages; ``HybridStreamAnalytics.run`` is a
+thin wrapper over ``repro.runtime.executor.InProcessExecutor`` (the
+synchronous modality), and the same stages run bus-scheduled under any
+``Deployment`` via ``repro.runtime.executor.BusExecutor``.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.weighting import (
-    combine,
-    dwa_closed_form,
-    dwa_scipy,
-    rmse,
-    static_weights,
-)
 from repro.core.windows import WindowedStream
-from repro.models.model import Model, get_model
+from repro.models.model import get_model
 from repro.training.train_loop import fit
 
 Params = Any
@@ -132,27 +130,12 @@ class HybridStreamAnalytics:
         self.mode = mode
         self.dwa_solver = dwa_solver
 
-    def _weights(self, prev_preds, prev_y) -> Tuple[float, float, float]:
-        """(w_speed, w_batch, solve_seconds) for the current window."""
-        if isinstance(self.mode, tuple) and self.mode[0] == "static":
-            ws, wb = static_weights(self.mode[1])
-            return ws, wb, 0.0
-        if self.mode == "dynamic":
-            if prev_preds is None:
-                return 0.5, 0.5, 0.0
-            t0 = time.perf_counter()
-            if self.dwa_solver == "scipy":
-                w = dwa_scipy([prev_preds[0], prev_preds[1]], prev_y)
-                ws, wb = float(w[0]), float(w[1])
-            else:
-                ws, wb = dwa_closed_form(prev_preds[0], prev_preds[1], prev_y)
-            return ws, wb, time.perf_counter() - t0
-        # degenerate modes for baselines
-        if self.mode == "speed":
-            return 1.0, 0.0, 0.0
-        if self.mode == "batch":
-            return 0.0, 1.0, 0.0
-        raise ValueError(f"unknown mode {self.mode!r}")
+    def stages(self):
+        """The learner decomposed into bus-schedulable pipeline stages."""
+        from repro.core.stages import PipelineStages
+
+        return PipelineStages.build(self.forecaster, self.mode,
+                                    self.dwa_solver)
 
     def run(
         self,
@@ -161,60 +144,10 @@ class HybridStreamAnalytics:
         key: jax.Array,
         start_window: int = 1,
     ) -> HybridRunResult:
-        fc = self.forecaster
-        records: List[WindowRecord] = []
-        speed_params: Optional[Params] = None
-        prev_preds: Optional[Tuple[np.ndarray, np.ndarray]] = None
-        prev_y: Optional[np.ndarray] = None
+        from repro.runtime.executor import InProcessExecutor
 
-        n = len(stream)
-        for t in range(n):
-            data = stream.supervised(t)
-            x, y = data["x"], data["y"]
-            if t >= start_window and speed_params is not None and len(x) > 0:
-                t0 = time.perf_counter()
-                pb = fc.predict(batch_params, x)
-                t_b = time.perf_counter() - t0
-                t0 = time.perf_counter()
-                ps = fc.predict(speed_params, x)
-                t_s = time.perf_counter() - t0
-
-                ws, wb, t_w = self._weights(prev_preds, prev_y)
-                t0 = time.perf_counter()
-                ph = combine([ps, pb], [ws, wb])
-                t_h = time.perf_counter() - t0 + t_w
-
-                records.append(
-                    WindowRecord(
-                        window=t,
-                        rmse_batch=rmse(y, pb),
-                        rmse_speed=rmse(y, ps),
-                        rmse_hybrid=rmse(y, ph),
-                        w_speed=ws,
-                        w_batch=wb,
-                        t_batch_infer=t_b,
-                        t_speed_infer=t_s,
-                        t_hybrid_infer=t_h,
-                        t_weight_solve=t_w,
-                    )
-                )
-                # Algorithm 1 inputs for the *next* window: predictions of
-                # (M^s trained below, M^b) on this window's data are produced
-                # after speed training; the paper stacks M^s_{t-1} with the
-                # previous window's test set.
-            # training phase: speed model for the next window
-            key, sub = jax.random.split(key)
-            t0 = time.perf_counter()
-            new_speed, t_train = fc.train(data, speed_params, sub)
-            if records and records[-1].window == t:
-                records[-1].t_speed_train = t_train
-            # stash Algorithm-1 inputs: predictions of (M^s_t, M^b) on
-            # window t — consumed when weighting window t+1
-            if len(x) > 0:
-                prev_preds = (fc.predict(new_speed, x), fc.predict(batch_params, x))
-                prev_y = y
-            speed_params = new_speed
-        return HybridRunResult(records=records, mode=str(self.mode))
+        return InProcessExecutor(self.stages(), start_window=start_window).run(
+            stream, batch_params, key)
 
 
 def pretrain_batch_model(

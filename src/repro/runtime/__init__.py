@@ -15,5 +15,10 @@ from repro.runtime.deployment import (  # noqa: F401
     edge_centric,
     edge_cloud_integrated,
 )
+from repro.runtime.executor import (  # noqa: F401
+    BusExecutor,
+    BusRunResult,
+    InProcessExecutor,
+)
 from repro.runtime.latency import CostModel, LatencyLedger  # noqa: F401
 from repro.runtime.modules import EdgeCloudSimulation, SimulationResult  # noqa: F401

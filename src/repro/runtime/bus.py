@@ -27,12 +27,15 @@ class Site:
     ``compute_scale`` rescales *measured-on-this-container* wall-times to the
     site's hardware class (e.g. Raspberry Pi 4 ~0.25x of a c5 vCPU);
     ``memory_bytes`` is the capacity model used for the OOM reproduction.
+    ``workers`` is how many modules the site can execute concurrently
+    (``BusExecutor`` site occupancy; the calibrated simulation ignores it).
     """
 
     name: str
     kind: str  # "edge" | "cloud"
     compute_scale: float = 1.0
     memory_bytes: float = 4e9
+    workers: int = 1
 
 
 @dataclass(frozen=True)
@@ -66,9 +69,13 @@ def paper_topology() -> Topology:
     # Pi inference runs near-parity with the c5 for the tiny TFLite LSTM
     # (paper Table 3: edge comp 10.25 s vs cloud 8.82 s); the Pi penalty
     # shows up in *training* (OOM) and in contention (see modules.py)
+    # any one of our JAX/TF jobs saturates the Pi's 4 small cores (workers=1)
+    # while the 16-vCPU c5.4xlarge overlaps training with inference
     sites = {
-        "edge": Site("edge", "edge", compute_scale=0.85, memory_bytes=4e9),
-        "cloud": Site("cloud", "cloud", compute_scale=2.0, memory_bytes=32e9),
+        "edge": Site("edge", "edge", compute_scale=0.85, memory_bytes=4e9,
+                     workers=1),
+        "cloud": Site("cloud", "cloud", compute_scale=2.0, memory_bytes=32e9,
+                      workers=4),
     }
     links = {
         ("edge", "cloud"): Link(latency_s=0.045, bandwidth_Bps=2.5e6),

@@ -1,0 +1,435 @@
+"""Executors: schedule the hybrid learner's pipeline stages (``core.stages``)
+under a deployment placement.
+
+``InProcessExecutor`` replays the paper's synchronous per-window loop — the
+pre-refactor ``HybridStreamAnalytics.run`` — over the extracted stages, with
+identical results, records and key derivation.
+
+``BusExecutor`` runs the *same stage objects* as ``TopicBus`` subscribers
+placed per a ``Deployment`` map: windows are injected onto the stream topic,
+each stage's real wall-clock is measured on this container, rescaled by its
+site's ``compute_scale``, and accounted in the ``LatencyLedger`` — measured
+latency, not ``CostModel`` constants.  Stage completions advance virtual
+time, so the paper's M^s_{t-1} semantics (stale-model inference while speed
+training is in flight) emerge from event ordering: speed training publishes
+fresh params on the model topic whenever it finishes, and inference simply
+uses whatever model ``model_sync`` has installed by the time a window
+arrives.
+
+Site occupancy is modeled with a per-site worker pool (``Site.workers``): the
+Pi executes one module at a time, so a co-located training attempt delays the
+inference chain — the paper's edge-centric contention — while the c5-class
+cloud site overlaps training with inference.  A stage fired at virtual time
+``d`` computes immediately (host time) on inputs snapshotted at ``d``, but
+its *virtual* completion is queued behind earlier work on its site; the gap
+is accounted in the ledger's ``queue`` column.
+
+Capacity is still a model (we cannot OOM a real Pi from this container):
+placing speed training on a site whose ``memory_bytes`` cannot hold
+``CostModel.train_memory_bytes`` records a failure, charges the thrash time
+of the attempt (the warmup-measured training wall), and never publishes a
+model — so the edge-centric speed layer degrades to serving the batch model,
+exactly the paper's Sec. 6.2 outcome.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.hybrid import HybridRunResult, WindowRecord
+from repro.core.stages import PipelineStages, split_chain
+from repro.core.weighting import rmse
+from repro.core.windows import WindowedStream
+from repro.runtime.bus import (
+    CapacityError,
+    EventKernel,
+    Message,
+    TopicBus,
+    Topology,
+)
+from repro.runtime.deployment import Deployment
+from repro.runtime.latency import CostModel, LatencyLedger
+from repro.runtime.modules import (
+    T_BATCH,
+    T_HYBRID,
+    T_MODEL,
+    T_SPEED,
+    T_STREAM,
+)
+
+Params = Any
+
+
+def _nbytes(tree: Any) -> float:
+    """Real byte size of a pytree of arrays (measured model/result sizes)."""
+    import jax
+
+    return float(sum(np.asarray(x).nbytes for x in jax.tree_util.tree_leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+# Synchronous path
+# ---------------------------------------------------------------------------
+
+
+class InProcessExecutor:
+    """The paper's synchronous loop over the extracted stages.
+
+    Backward-compatible with the pre-refactor ``HybridStreamAnalytics.run``:
+    same key chain, same window bookkeeping, same ``WindowRecord`` timing
+    conventions (``t_weight_solve`` counts only the dynamic solve)."""
+
+    def __init__(self, stages: PipelineStages, start_window: int = 1):
+        self.stages = stages
+        self.start_window = start_window
+
+    def run(self, stream: WindowedStream, batch_params: Params, key,
+            n_windows: Optional[int] = None) -> HybridRunResult:
+        st = self.stages
+        n = len(stream) if n_windows is None else min(n_windows, len(stream))
+        keys = split_chain(key, n)
+        records: List[WindowRecord] = []
+        speed_params: Optional[Params] = None
+        prev_preds = prev_y = None
+
+        for t in range(n):
+            data = stream.supervised(t)
+            x, y = data["x"], data["y"]
+            if t >= self.start_window and speed_params is not None and len(x) > 0:
+                b = st.batch_inference(batch_params=batch_params, x=x)
+                s = st.speed_inference(speed_params=speed_params, x=x)
+                w = st.weight_solve(prev_preds=prev_preds, prev_y=prev_y)
+                t_w = (w.wall_s if st.weight_solve.is_dynamic
+                       and prev_preds is not None else 0.0)
+                h = st.hybrid_combine(
+                    pred_speed=s["pred"], pred_batch=b["pred"],
+                    w_speed=w["w_speed"], w_batch=w["w_batch"])
+                records.append(WindowRecord(
+                    window=t,
+                    rmse_batch=rmse(y, b["pred"]),
+                    rmse_speed=rmse(y, s["pred"]),
+                    rmse_hybrid=rmse(y, h["pred"]),
+                    w_speed=w["w_speed"],
+                    w_batch=w["w_batch"],
+                    t_batch_infer=b.wall_s,
+                    t_speed_infer=s.wall_s,
+                    t_hybrid_infer=h.wall_s + t_w,
+                    t_weight_solve=t_w,
+                ))
+            # training phase: speed model for the next window
+            tr = st.speed_training(data=data, speed_params=speed_params,
+                                   batch_params=batch_params, key=keys[t])
+            if records and records[-1].window == t:
+                records[-1].t_speed_train = tr["train_wall_s"]
+            if tr["eval_preds"] is not None:
+                prev_preds, prev_y = tr["eval_preds"], tr["eval_y"]
+            speed_params = tr["params"]
+        return HybridRunResult(records=records, mode=str(st.mode))
+
+
+# ---------------------------------------------------------------------------
+# Bus-scheduled path
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BusRunResult:
+    """What one ``BusExecutor`` run produced: real per-window accuracy records
+    plus the measured (rescaled) latency ledger and per-window end-to-end
+    latency (window injected -> hybrid result delivered back to the
+    injection site)."""
+
+    records: List[WindowRecord]
+    ledger: LatencyLedger
+    failures: List[str]
+    n_windows: int
+    e2e_s: Dict[int, float]
+    message_log: List[Message]
+    mode: str
+
+    def table3(self) -> Dict[str, Dict[str, float]]:
+        return self.ledger.table()
+
+    def mean_e2e_s(self) -> float:
+        if not self.e2e_s:
+            return float("nan")
+        return float(np.mean(list(self.e2e_s.values())))
+
+    def to_hybrid_result(self) -> HybridRunResult:
+        return HybridRunResult(records=self.records, mode=self.mode)
+
+
+@dataclass
+class _ModelState:
+    """The serving-side speed model installed by model_sync."""
+
+    params: Optional[Params] = None
+    prev_preds: Optional[tuple] = None
+    prev_y: Optional[np.ndarray] = None
+    window: int = -1
+
+
+class BusExecutor:
+    """Drive the stages as topic-bus subscribers under a placement map.
+
+    The ``CostModel`` is consulted only for what cannot be measured from this
+    container: the Kafka ingest throttle (``ingest_s``, charged as
+    communication on stream consumers) and the training-job memory footprint
+    (``train_memory_bytes``, the capacity model).  All compute is measured;
+    all transfer sizes are the real array/parameter byte counts.
+    """
+
+    def __init__(
+        self,
+        stages: PipelineStages,
+        deployment: Deployment,
+        topo: Topology,
+        cost: Optional[CostModel] = None,
+        *,
+        start_window: int = 1,
+        window_period_s: float = 30.0,
+        strict_capacity: bool = False,
+    ):
+        self.stages = stages
+        self.dep = deployment
+        self.topo = topo
+        self.cost = cost or CostModel()
+        self.start_window = start_window
+        self.period = window_period_s
+        self.strict = strict_capacity
+
+    # -- per-run state -------------------------------------------------------
+
+    def _reset(self) -> None:
+        self.kernel = EventKernel()
+        self.bus = TopicBus(self.kernel, self.topo)
+        self.ledger = LatencyLedger()
+        self.failures: List[str] = []
+        self._model = _ModelState()
+        self._records: Dict[int, WindowRecord] = {}
+        self._train_walls: Dict[int, float] = {}
+        self._pending: Dict[int, Dict[str, Message]] = {}
+        self._inject_t: Dict[int, float] = {}
+        self.e2e_s: Dict[int, float] = {}
+        self._free: Dict[str, List[float]] = {}
+        self._warm_train_s: float = 0.0
+        self._wire()
+
+    def _wire(self) -> None:
+        dep, bus = self.dep, self.bus
+        bus.subscribe(T_STREAM, dep.site_of("batch_inference"), self._on_batch)
+        bus.subscribe(T_STREAM, dep.site_of("speed_inference"), self._on_speed)
+        bus.subscribe(T_STREAM, dep.site_of("speed_training"), self._on_train)
+        bus.subscribe(T_STREAM, dep.site_of("data_sync"), self._on_data_sync)
+        bus.subscribe(T_BATCH, dep.site_of("hybrid_inference"), self._on_part)
+        bus.subscribe(T_SPEED, dep.site_of("hybrid_inference"), self._on_part)
+        bus.subscribe(T_HYBRID, dep.site_of("archiving"), self._on_archive)
+        bus.subscribe(T_HYBRID, dep.site_of("data_injection"), self._on_user)
+        bus.subscribe(T_MODEL, dep.site_of("model_sync"), self._on_model_sync)
+
+    # -- scheduling ----------------------------------------------------------
+
+    def _site(self, module: str):
+        return self.topo.sites[self.dep.site_of(module)]
+
+    def _schedule(self, module: str, wall_s: float, comm_s: float,
+                  done: Optional[Callable[[], None]] = None) -> None:
+        """Account a stage that took ``wall_s`` real seconds: rescale to the
+        site's hardware class, queue it behind earlier work on the site's
+        worker pool, and fire ``done`` at its virtual completion."""
+        site = self._site(module)
+        scaled = wall_s / max(site.compute_scale, 1e-9)
+        pool = self._free.setdefault(
+            site.name, [self.kernel.now] * max(site.workers, 1))
+        i = min(range(len(pool)), key=pool.__getitem__)
+        start = max(self.kernel.now, pool[i])
+        queue_s = start - self.kernel.now
+        pool[i] = start + scaled
+
+        def finish():
+            self.ledger.add(module, comp_s=scaled, comm_s=comm_s,
+                            queue_s=queue_s)
+            if done is not None:
+                done()
+
+        self.kernel.at(start + scaled, finish)
+
+    # -- handlers ------------------------------------------------------------
+
+    def _on_batch(self, msg: Message) -> None:
+        w = msg.payload["window"]
+        if w < self.start_window:
+            return
+        comm = msg.deliver_time - msg.publish_time + self.cost.ingest_s
+        out = self.stages.batch_inference(
+            batch_params=self._batch_params, x=msg.payload["x"])
+        self._schedule(
+            "batch_inference", out.wall_s, comm,
+            lambda: self.bus.publish(
+                T_BATCH,
+                {"window": w, "kind": "batch", "pred": out["pred"],
+                 "wall_s": out.wall_s, "fallback": False},
+                _nbytes(out["pred"]), self.dep.site_of("batch_inference")))
+
+    def _on_speed(self, msg: Message) -> None:
+        w = msg.payload["window"]
+        if w < self.start_window:
+            return
+        comm = msg.deliver_time - msg.publish_time + self.cost.ingest_s
+        out = self.stages.speed_inference(
+            speed_params=self._model.params, x=msg.payload["x"],
+            fallback_params=self._batch_params)
+        self._schedule(
+            "speed_inference", out.wall_s, comm,
+            lambda: self.bus.publish(
+                T_SPEED,
+                {"window": w, "kind": "speed", "pred": out["pred"],
+                 "wall_s": out.wall_s, "fallback": out["fallback"]},
+                _nbytes(out["pred"]), self.dep.site_of("speed_inference")))
+
+    def _on_part(self, msg: Message) -> None:
+        w = msg.payload["window"]
+        parts = self._pending.setdefault(w, {})
+        parts[msg.payload["kind"]] = msg
+        if len(parts) < 2:
+            return
+        st = self.stages
+        bmsg, smsg = parts["batch"], parts["speed"]
+        comm = max(m.deliver_time - m.publish_time for m in parts.values())
+        wsol = st.weight_solve(prev_preds=self._model.prev_preds,
+                               prev_y=self._model.prev_y)
+        t_w = (wsol.wall_s if st.weight_solve.is_dynamic
+               and self._model.prev_preds is not None else 0.0)
+        hc = st.hybrid_combine(
+            pred_speed=smsg.payload["pred"], pred_batch=bmsg.payload["pred"],
+            w_speed=wsol["w_speed"], w_batch=wsol["w_batch"])
+        y = self._ys[w]
+        rec = WindowRecord(
+            window=w,
+            rmse_batch=rmse(y, bmsg.payload["pred"]),
+            rmse_speed=rmse(y, smsg.payload["pred"]),
+            rmse_hybrid=rmse(y, hc["pred"]),
+            w_speed=wsol["w_speed"],
+            w_batch=wsol["w_batch"],
+            t_speed_train=self._train_walls.get(w, 0.0),
+            t_batch_infer=bmsg.payload["wall_s"],
+            t_speed_infer=smsg.payload["wall_s"],
+            t_hybrid_infer=hc.wall_s + t_w,
+            t_weight_solve=t_w,
+        )
+        self._records[w] = rec
+        self._schedule(
+            "hybrid_inference", wsol.wall_s + hc.wall_s, comm,
+            lambda: self.bus.publish(
+                T_HYBRID,
+                {"window": w, "rmse_hybrid": rec.rmse_hybrid,
+                 "w_speed": rec.w_speed},
+                _nbytes(hc["pred"]), self.dep.site_of("hybrid_inference")))
+
+    def _on_train(self, msg: Message) -> None:
+        w = msg.payload["window"]
+        comm = msg.deliver_time - msg.publish_time
+        site = self._site("speed_training")
+        if self.cost.train_memory_bytes > site.memory_bytes:
+            self.failures.append(
+                f"speed_training OOM on {site.name}: needs "
+                f"{self.cost.train_memory_bytes/1e9:.1f} GB > "
+                f"{site.memory_bytes/1e9:.1f} GB")
+            if self.strict:
+                raise CapacityError(self.failures[-1])
+            # the attempt thrashes the site for a full training duration
+            # before the OOM kill; no model is ever published
+            self._schedule("speed_training", self._warm_train_s, comm)
+            return
+        out = self.stages.speed_training(
+            data={"x": msg.payload["x"], "y": msg.payload["y"]},
+            speed_params=self._model.params,
+            batch_params=self._batch_params, key=self._keys[w])
+        self._train_walls[w] = out["train_wall_s"]
+        if w in self._records:
+            self._records[w].t_speed_train = out["train_wall_s"]
+        self._schedule(
+            "speed_training", out.wall_s, comm,
+            lambda: self.bus.publish(
+                T_MODEL,
+                {"window": w, "params": out["params"],
+                 "eval_preds": out["eval_preds"], "eval_y": out["eval_y"]},
+                _nbytes(out["params"]), self.dep.site_of("speed_training")))
+
+    def _on_model_sync(self, msg: Message) -> None:
+        if msg.payload["window"] <= self._model.window:
+            # out-of-order publish (overlapping trainings on a multi-worker
+            # site): the transfer happened, but never install an older model
+            # over a newer one
+            self.ledger.add("model_sync", comp_s=0.0,
+                            comm_s=msg.deliver_time - msg.publish_time)
+            return
+        out = self.stages.model_sync(
+            params=msg.payload["params"], eval_preds=msg.payload["eval_preds"],
+            eval_y=msg.payload["eval_y"])
+        self._model = _ModelState(
+            params=out["speed_params"], prev_preds=out["prev_preds"],
+            prev_y=out["prev_y"], window=msg.payload["window"])
+        self._schedule("model_sync", out.wall_s,
+                       msg.deliver_time - msg.publish_time)
+
+    def _on_data_sync(self, msg: Message) -> None:
+        out = self.stages.data_sync(nbytes=msg.nbytes)
+        link = self.topo.link(self.dep.site_of("data_sync"),
+                              self.dep.site_of("archiving"))
+        self._schedule("data_sync", out.wall_s,
+                       link.transfer_time(out["nbytes"]))
+
+    def _on_archive(self, msg: Message) -> None:
+        self.ledger.add("archiving", comp_s=0.0,
+                        comm_s=msg.deliver_time - msg.publish_time)
+
+    def _on_user(self, msg: Message) -> None:
+        w = msg.payload["window"]
+        if w in self._inject_t:
+            self.e2e_s[w] = msg.deliver_time - self._inject_t[w]
+
+    # -- driver --------------------------------------------------------------
+
+    def _warmup(self, stream: WindowedStream, batch_params: Params, key) -> None:
+        """Compile every jit path once (the paper's steady-state windows) and
+        measure a reference training wall for the OOM-attempt thrash model."""
+        import jax
+
+        data = stream.supervised(0)
+        out = self.stages.speed_training(
+            data=data, speed_params=None, batch_params=batch_params,
+            key=jax.random.fold_in(key, 0))
+        self._warm_train_s = out["train_wall_s"]
+        self.stages.batch_inference(batch_params=batch_params, x=data["x"])
+
+    def run(self, stream: WindowedStream, batch_params: Params, key,
+            n_windows: Optional[int] = None) -> BusRunResult:
+        from repro.streams.injection import BusInjector
+
+        self._reset()
+        n = len(stream) if n_windows is None else min(n_windows, len(stream))
+        self._batch_params = batch_params
+        self._keys = split_chain(key, n)
+        self._ys = {}
+        self._warmup(stream, batch_params, key)
+
+        injector = BusInjector(self.kernel, self.bus, T_STREAM,
+                               self.dep.site_of("data_injection"),
+                               period_s=self.period)
+        for w in range(n):
+            data = stream.supervised(w)
+            self._ys[w] = data["y"]
+            self._inject_t[w] = injector.schedule_window(w, data)
+        self.kernel.run()
+        return BusRunResult(
+            records=[self._records[w] for w in sorted(self._records)],
+            ledger=self.ledger,
+            failures=self.failures,
+            n_windows=n,
+            e2e_s=dict(self.e2e_s),
+            message_log=self.bus.log,
+            mode=str(self.stages.mode),
+        )

@@ -39,14 +39,20 @@ class CostModel:
 
 @dataclass
 class LatencyLedger:
-    """Accumulates (computation, communication) seconds per (module, window)."""
+    """Accumulates (computation, communication, queue) seconds per (module,
+    window).  ``queue`` is the time a stage waited for a free worker on its
+    site (only the measured ``BusExecutor`` path produces nonzero queueing;
+    the calibrated simulation does not model site occupancy)."""
 
     comp: Dict[str, list] = field(default_factory=dict)
     comm: Dict[str, list] = field(default_factory=dict)
+    queue: Dict[str, list] = field(default_factory=dict)
 
-    def add(self, module: str, comp_s: float = 0.0, comm_s: float = 0.0):
+    def add(self, module: str, comp_s: float = 0.0, comm_s: float = 0.0,
+            queue_s: float = 0.0):
         self.comp.setdefault(module, []).append(comp_s)
         self.comm.setdefault(module, []).append(comm_s)
+        self.queue.setdefault(module, []).append(queue_s)
 
     def table(self) -> Dict[str, Dict[str, float]]:
         out = {}
@@ -54,5 +60,7 @@ class LatencyLedger:
         for m in sorted(mods):
             c = float(np.mean(self.comp.get(m, [0.0])))
             x = float(np.mean(self.comm.get(m, [0.0])))
-            out[m] = {"computation": c, "communication": x, "total": c + x}
+            q = float(np.mean(self.queue.get(m, [0.0])))
+            out[m] = {"computation": c, "communication": x, "queue": q,
+                      "total": c + x + q}
         return out

@@ -54,6 +54,33 @@ class DataInjection:
         return n_records / self.cfg.ingest_rate_hz
 
 
+class BusInjector:
+    """Feed windowed stream payloads onto a topic bus (the data_injection
+    module of the bus-scheduled pipeline): window ``w`` is published on
+    ``topic`` at virtual time ``w * period_s`` from ``site``, carrying the
+    window's real supervised arrays; ``nbytes`` is the actual payload size so
+    link transfer times reflect the data that moves."""
+
+    def __init__(self, kernel, bus, topic: str, site: str,
+                 period_s: float = 30.0):
+        self.kernel = kernel
+        self.bus = bus
+        self.topic = topic
+        self.site = site
+        self.period_s = period_s
+        self.injected = 0
+
+    def schedule_window(self, w: int, data: dict) -> float:
+        """Schedule window ``w``'s publish; returns its injection time."""
+        t = w * self.period_s
+        payload = {"window": w, "x": data["x"], "y": data["y"]}
+        nbytes = float(data["x"].nbytes + data["y"].nbytes)
+        self.kernel.at(
+            t, lambda: self.bus.publish(self.topic, payload, nbytes, self.site))
+        self.injected += 1
+        return t
+
+
 def stream_windows(series: np.ndarray, records_per_window: int) -> List[np.ndarray]:
     """Offline equivalent: chop a series into fixed-size time windows."""
     n = (len(series) // records_per_window) * records_per_window

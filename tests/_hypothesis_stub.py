@@ -1,0 +1,37 @@
+"""Drop-in stand-ins for the hypothesis API used by this suite, so test
+modules that mix property tests with deterministic tests still collect (and
+run their deterministic tests) when hypothesis isn't installed.
+
+``given`` marks the decorated test as skipped; ``settings`` is a no-op
+decorator; ``st`` yields inert strategy placeholders for module-level
+strategy construction (``st.composite``, ``st.integers(...)``, ...).
+"""
+import pytest
+
+
+def _inert(*_args, **_kwargs):
+    """Absorbs any call chain strategies make at module level."""
+    return _inert
+
+
+class _Strategies:
+    def __getattr__(self, _name):
+        return _inert
+
+
+st = _Strategies()
+
+
+def given(*_args, **_kwargs):
+    return pytest.mark.skip(reason="hypothesis not installed")
+
+
+def settings(*_args, **_kwargs):
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+settings.register_profile = _inert
+settings.load_profile = _inert

@@ -1,7 +1,10 @@
 """Window manager, supervised construction, scaler and injection tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests skip; deterministic tests run
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.windows import WindowedStream, WindowPlan, make_supervised
 from repro.streams import DataInjection, MinMaxScaler, ThrottleConfig
