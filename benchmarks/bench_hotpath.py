@@ -1,0 +1,185 @@
+"""Speed-layer hot-path benchmark: per-window training wall-clock, compiled
+vs legacy, tracked as ``BENCH_hotpath.json`` from this PR onward.
+
+The paper's latency claim (Table 3, Sec. 6.3) needs speed-layer retraining to
+fit inside every 30 s window.  The legacy path re-traces and re-compiles the
+train step every window and dispatches one device call per minibatch; the
+compiled path (``repro.training.compiled.CompiledForecaster``) compiles one
+epoch-scan executable per shape bucket and dispatches once per window.  This
+benchmark drives both over the same drifting windowed stream (paper LSTM
+config: H=40, lag 5, 5 features, speed layer bs 64) and records:
+
+* per-window speed-train wall-clock, for each path;
+* steady-state (windows >= 2) mean wall and windows/sec;
+* first-window vs steady-state ratio (the amortized compile);
+* retrace counts (measured trace-time counter on the compiled path; the
+  legacy path re-jits by construction, one trace per window);
+* ``speedup_steady_state`` = legacy steady mean / compiled steady mean.
+
+    PYTHONPATH=src python -m benchmarks.bench_hotpath            # paper-ish
+    PYTHONPATH=src python -m benchmarks.bench_hotpath --smoke    # CI: seconds
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+
+def _stream_windows(n_windows: int, records_per_window: int):
+    """The paper's drifting wind-turbine stream, windowed and supervised —
+    same construction as ``launch.edge_cloud.build_real_pipeline``."""
+    import numpy as np
+
+    from repro.core import WindowPlan, WindowedStream
+    from repro.streams.normalize import MinMaxScaler
+    from repro.streams.sources import gradual_drift, wind_turbine_series
+
+    series = wind_turbine_series(
+        1600 + records_per_window * n_windows + 5, seed=0)
+    hist, stream_raw = series[:1600], series[1600:]
+    stream_raw = gradual_drift(stream_raw, alphas=np.full(5, 1.5e-3), seed=1)
+    scaler = MinMaxScaler.fit(hist)
+    stream = WindowedStream(scaler.transform(stream_raw),
+                            WindowPlan(n_windows, records_per_window, lag=5))
+    return [stream.supervised(w) for w in range(n_windows)]
+
+
+def _drive(fc, windows, key) -> List[float]:
+    """One fc.train per window (cold params each window — the paper's speed
+    layer), returning per-window wall seconds."""
+    from repro.core.stages import split_chain
+
+    keys = split_chain(key, len(windows))
+    walls = []
+    for data, k in zip(windows, keys):
+        t0 = time.perf_counter()
+        fc.train(data, None, k)
+        walls.append(time.perf_counter() - t0)
+    return walls
+
+
+def _summary(walls: List[float], retraces: List[int]) -> Dict:
+    steady = walls[1:] if len(walls) > 1 else walls
+    mean_steady = sum(steady) / len(steady)
+    return {
+        "per_window_wall_s": walls,
+        "retraces_per_window": retraces,
+        "first_window_wall_s": walls[0],
+        "steady_state_wall_s": mean_steady,
+        "first_vs_steady_ratio": walls[0] / max(mean_steady, 1e-12),
+        "windows_per_sec_steady": 1.0 / max(mean_steady, 1e-12),
+        "retraces_after_first_window": sum(retraces[1:]),
+    }
+
+
+def run(n_windows: int = 8, records_per_window: int = 250,
+        epochs: int = 10, batch_size: int = 64) -> Dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import lstm_forecaster
+    from repro.core.stages import split_chain
+
+    cfg = get_config("lstm-paper")
+    windows = _stream_windows(n_windows, records_per_window)
+    key = jax.random.PRNGKey(1)
+
+    # -- compiled hot path ---------------------------------------------------
+    fc = lstm_forecaster(cfg, epochs=epochs, batch_size=batch_size)
+    eng = fc.engine
+    walls, retraces, seen = [], [], 0
+    for data, k in zip(windows, split_chain(key, n_windows)):
+        t0 = time.perf_counter()
+        fc.train(data, None, k)
+        walls.append(time.perf_counter() - t0)
+        retraces.append(eng.retrace_count - seen)
+        seen = eng.retrace_count
+    compiled = _summary(walls, retraces)
+    compiled["shape_buckets"] = eng.cache_size
+
+    # -- legacy baseline (pre-optimization fit: re-jit every window) ---------
+    fl = lstm_forecaster(cfg, epochs=epochs, batch_size=batch_size,
+                         compiled=False)
+    lwalls = _drive(fl, windows, key)
+    # each legacy fit builds a fresh jit, so it retraces every distinct batch
+    # shape every window: the full batch plus the ragged tail when n % bs != 0
+    # (a sub-batch-size window has only the one ragged shape)
+    lretraces = [1 if len(w["x"]) % batch_size == 0 or len(w["x"]) < batch_size
+                 else 2 for w in windows]
+    legacy = _summary(lwalls, lretraces)
+
+    return {
+        "benchmark": "speed_layer_hotpath",
+        "config": {
+            "model": "lstm-paper",
+            "n_windows": n_windows,
+            "records_per_window": records_per_window,
+            "epochs": epochs,
+            "batch_size": batch_size,
+        },
+        "compiled": compiled,
+        "legacy": legacy,
+        "speedup_steady_state": (legacy["steady_state_wall_s"]
+                                 / max(compiled["steady_state_wall_s"], 1e-12)),
+    }
+
+
+def report(res: Dict) -> str:
+    c, l = res["compiled"], res["legacy"]
+    lines = [
+        "# speed-layer hot path: per-window training wall-clock (s)",
+        f"{'window':<8}{'compiled':>12}{'legacy':>12}{'retraces(c)':>12}",
+    ]
+    for w, (cw, lw, r) in enumerate(zip(c["per_window_wall_s"],
+                                        l["per_window_wall_s"],
+                                        c["retraces_per_window"])):
+        lines.append(f"{w:<8}{cw:>12.4f}{lw:>12.4f}{r:>12}")
+    lines += [
+        "",
+        f"steady-state wall: compiled {c['steady_state_wall_s']:.4f}s "
+        f"({c['windows_per_sec_steady']:.1f} windows/s)  "
+        f"legacy {l['steady_state_wall_s']:.4f}s "
+        f"({l['windows_per_sec_steady']:.1f} windows/s)",
+        f"first-vs-steady ratio: compiled {c['first_vs_steady_ratio']:.1f}x  "
+        f"legacy {l['first_vs_steady_ratio']:.1f}x",
+        f"retraces after first window: compiled "
+        f"{c['retraces_after_first_window']} "
+        f"(buckets={c['shape_buckets']})  legacy "
+        f"{l['retraces_after_first_window']}",
+        f"steady-state speedup: {res['speedup_steady_state']:.1f}x",
+    ]
+    return "\n".join(lines)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized run: 4 windows, 3 epochs, 120 records")
+    p.add_argument("--windows", type=int, default=None)
+    p.add_argument("--epochs", type=int, default=None)
+    p.add_argument("--records", type=int, default=None)
+    p.add_argument("--out", default="BENCH_hotpath.json")
+    args = p.parse_args()
+
+    if args.smoke:
+        defaults = dict(n_windows=4, epochs=3, records_per_window=120)
+    else:
+        defaults = dict(n_windows=8, epochs=10, records_per_window=250)
+    if args.windows is not None:
+        defaults["n_windows"] = args.windows
+    if args.epochs is not None:
+        defaults["epochs"] = args.epochs
+    if args.records is not None:
+        defaults["records_per_window"] = args.records
+
+    res = run(**defaults)
+    print(report(res))
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

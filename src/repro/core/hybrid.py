@@ -37,17 +37,38 @@ Params = Any
 
 @dataclass(frozen=True)
 class Forecaster:
-    """train(data, params, key) -> (params, wall_s); predict(params, x) -> y."""
+    """train(data, params, key) -> (params, wall_s); predict(params, x) -> y.
+
+    ``engine`` (optional) exposes the backing trainer — for the compiled
+    path, the ``CompiledForecaster`` whose ``retrace_count`` the hot-path
+    benchmark and the compile-cache regression tests inspect."""
 
     train: Callable[[Dict[str, np.ndarray], Optional[Params], jax.Array],
                     Tuple[Params, float]]
     predict: Callable[[Params, np.ndarray], np.ndarray]
+    engine: Any = None
 
 
 def lstm_forecaster(cfg: ModelConfig, *, epochs: int, batch_size: int,
-                    lr: float = 1e-3, warm_start: bool = False) -> Forecaster:
+                    lr: float = 1e-3, warm_start: bool = False,
+                    compiled: bool = True) -> Forecaster:
+    """The paper's LSTM forecaster.  ``compiled=True`` (default) rides the
+    compile-once hot path: one cached jitted ``lax.scan`` fit executable per
+    shape bucket (``repro.training.compiled``), one dispatch per window.
+    ``compiled=False`` keeps the legacy per-call ``fit`` (fresh trace+compile
+    every window, one dispatch per minibatch) — the pre-optimization
+    baseline the hot-path benchmark measures against."""
     model = get_model(cfg)
     from repro.models import lstm as lstm_mod
+
+    if compiled:
+        from repro.training.compiled import CompiledForecaster
+
+        eng = CompiledForecaster(
+            model, epochs=epochs, batch_size=batch_size, lr=lr,
+            warm_start=warm_start,
+            predict_fn=lambda p, x: lstm_mod.predict(cfg, p, x))
+        return Forecaster(train=eng.train, predict=eng.predict, engine=eng)
 
     predict_jit = jax.jit(lambda p, x: lstm_mod.predict(cfg, p, x))
 

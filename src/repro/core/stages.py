@@ -53,7 +53,9 @@ class StageOutput:
 class Stage:
     """Base: times ``compute`` with a perf counter; subclasses are pure in the
     sense that all state enters via ``compute`` kwargs and leaves via the
-    returned dict."""
+    returned dict.  JAX dispatch is asynchronous, so the wrapper blocks on
+    any device-array outputs before stopping the clock — otherwise the
+    ``LatencyLedger`` would credit a stage for work still in flight."""
 
     name: str = "stage"
 
@@ -61,8 +63,14 @@ class Stage:
         raise NotImplementedError
 
     def __call__(self, **inputs: Any) -> StageOutput:
+        import jax
+
         t0 = time.perf_counter()
         values = self.compute(**inputs)
+        pending = [x for x in jax.tree_util.tree_leaves(values)
+                   if isinstance(x, jax.Array)]
+        if pending:
+            jax.block_until_ready(pending)
         return StageOutput(values=values, wall_s=time.perf_counter() - t0)
 
 

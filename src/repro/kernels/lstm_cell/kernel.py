@@ -1,16 +1,25 @@
-"""Fused LSTM cell kernel.
+"""Fused LSTM kernels: one step (``lstm_cell``) and a whole sequence
+(``lstm_sequence_fused``).
 
 The paper's speed layer re-trains a small LSTM inside every 30 s window, so
-the per-step cell is the latency-critical inner loop.  On TPU the win is
-fusing the two matmuls (x@Wx + h@Wh -> one (B, 4H) gate pre-activation) with
-the gate nonlinearities and state update in one VMEM-resident kernel: the
-weights (F+H, 4H) stay in VMEM across the time scan and the (B, 4H)
-intermediate never round-trips to HBM.
+the recurrence is the latency-critical inner loop.  On TPU the win is fusing
+the two matmuls (x@Wx + h@Wh -> one (B, 4H) gate pre-activation) with the
+gate nonlinearities and state update in one VMEM-resident kernel: the
+weights (F+H, 4H) stay in VMEM and the (B, 4H) intermediate never
+round-trips to HBM.
+
+``lstm_cell`` fuses one timestep.  Scanning it over time (the old
+``ops.lstm_sequence``) still paid one kernel launch per step and re-staged
+the weights every launch.  ``lstm_sequence_fused`` moves the time loop
+*inside* a single ``pallas_call``: the (bb, T, F) input block and both
+weight blocks are resident for all T steps, the h/c carry lives in
+registers/VMEM, and only the final state is written out — one launch per
+batch tile for the whole sequence.
 
 Tiling: grid over batch tiles; weights are broadcast blocks (index_map pins
-them to block 0).  MXU alignment: for the paper model (H=40, F=5) the shapes
-are tiny and the kernel is bandwidth-trivial; for wider LSTMs choose
-block_b and H multiples of 8x128 lanes.
+them to block 0).  MXU alignment: for the paper model (H=40, F=5, T=5) the
+shapes are tiny and the kernel is bandwidth-trivial; for wider LSTMs choose
+block_b and H multiples of the 8x128 lanes.
 """
 from __future__ import annotations
 
@@ -19,6 +28,18 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import default_interpret
+
+
+def _gates(z, h_dim, c):
+    i = jax.nn.sigmoid(z[:, :h_dim])
+    f = jax.nn.sigmoid(z[:, h_dim : 2 * h_dim])
+    g = jnp.tanh(z[:, 2 * h_dim : 3 * h_dim])
+    o = jax.nn.sigmoid(z[:, 3 * h_dim :])
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
 
 
 def _cell_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, h_out, c_out):
@@ -31,20 +52,19 @@ def _cell_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, h_out, c_out):
 
     z = jnp.dot(x, wx, preferred_element_type=jnp.float32)
     z = z + jnp.dot(h, wh, preferred_element_type=jnp.float32) + b[None, :]
-    H = h.shape[-1]
-    i = jax.nn.sigmoid(z[:, :H])
-    f = jax.nn.sigmoid(z[:, H : 2 * H])
-    g = jnp.tanh(z[:, 2 * H : 3 * H])
-    o = jax.nn.sigmoid(z[:, 3 * H :])
-    c_new = f * c + i * g
-    h_new = o * jnp.tanh(c_new)
+    h_new, c_new = _gates(z, h.shape[-1], c)
     h_out[...] = h_new.astype(h_out.dtype)
     c_out[...] = c_new.astype(c_out.dtype)
 
 
 @partial(jax.jit, static_argnames=("block_b", "interpret"))
-def lstm_cell(x, h, c, wx, wh, b, *, block_b: int = 128, interpret: bool = True):
-    """One fused LSTM step.  x: (B, F); h, c: (B, H) -> (h', c')."""
+def lstm_cell(x, h, c, wx, wh, b, *, block_b: int = 128,
+              interpret: bool | None = None):
+    """One fused LSTM step.  x: (B, F); h, c: (B, H) -> (h', c').
+
+    ``interpret=None`` resolves via ``repro.kernels.default_interpret()``:
+    compiled Mosaic on a real TPU backend, interpreter elsewhere."""
+    interpret = default_interpret() if interpret is None else interpret
     B, F = x.shape
     H = h.shape[-1]
     bb = min(block_b, B)
@@ -70,3 +90,61 @@ def lstm_cell(x, h, c, wx, wh, b, *, block_b: int = 128, interpret: bool = True)
         ],
         interpret=interpret,
     )(x, h, c, wx, wh, b)
+
+
+def _sequence_kernel(x_ref, wx_ref, wh_ref, b_ref, h_out, c_out):
+    """Whole-sequence LSTM for one batch tile: time loop inside the kernel,
+    weights read once and VMEM-resident across all T steps."""
+    x = x_ref[...].astype(jnp.float32)        # (bb, T, F)
+    wx = wx_ref[...].astype(jnp.float32)      # (F, 4H)
+    wh = wh_ref[...].astype(jnp.float32)      # (H, 4H)
+    b = b_ref[...].astype(jnp.float32)        # (4H,)
+    bb, T, _ = x.shape
+    H = wh.shape[0]
+
+    def step(t, carry):
+        h, c = carry
+        x_t = jax.lax.dynamic_slice_in_dim(x, t, 1, axis=1)[:, 0, :]
+        z = jnp.dot(x_t, wx, preferred_element_type=jnp.float32)
+        z = z + jnp.dot(h, wh, preferred_element_type=jnp.float32) + b[None, :]
+        return _gates(z, H, c)
+
+    h0 = jnp.zeros((bb, H), jnp.float32)
+    c0 = jnp.zeros((bb, H), jnp.float32)
+    h, c = jax.lax.fori_loop(0, T, step, (h0, c0))
+    h_out[...] = h.astype(h_out.dtype)
+    c_out[...] = c.astype(c_out.dtype)
+
+
+@partial(jax.jit, static_argnames=("block_b", "interpret"))
+def lstm_sequence_fused(x, wx, wh, b, *, block_b: int = 128,
+                        interpret: bool | None = None):
+    """Fused full-sequence LSTM.  x: (B, T, F) -> final (h, c), each (B, H).
+
+    One ``pallas_call`` per batch-tile grid step covers all T timesteps —
+    versus T launches (and T weight re-stagings) for the scanned per-cell
+    kernel this replaces."""
+    interpret = default_interpret() if interpret is None else interpret
+    B, T, F = x.shape
+    H = wh.shape[0]
+    bb = min(block_b, B)
+    grid = (pl.cdiv(B, bb),)
+    return pl.pallas_call(
+        _sequence_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, T, F), lambda i: (i, 0, 0)),
+            pl.BlockSpec((F, 4 * H), lambda i: (0, 0)),  # weights: broadcast
+            pl.BlockSpec((H, 4 * H), lambda i: (0, 0)),
+            pl.BlockSpec((4 * H,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, H), lambda i: (i, 0)),
+            pl.BlockSpec((bb, H), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H), x.dtype),
+            jax.ShapeDtypeStruct((B, H), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, wx, wh, b)

@@ -1,4 +1,4 @@
-"""jit'd public ops for the fused LSTM cell kernel."""
+"""jit'd public ops for the fused LSTM kernels."""
 from __future__ import annotations
 
 from functools import partial
@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import default_interpret
-from repro.kernels.lstm_cell.kernel import lstm_cell
+from repro.kernels.lstm_cell.kernel import lstm_cell, lstm_sequence_fused
 
 
 def lstm_step(x_t, h, c, wx, wh, b, interpret: bool | None = None):
@@ -17,8 +17,21 @@ def lstm_step(x_t, h, c, wx, wh, b, interpret: bool | None = None):
 
 @partial(jax.jit, static_argnames=("interpret",))
 def lstm_sequence(x, wx, wh, b, interpret: bool | None = None):
-    """x: (B, T, F) -> final hidden (B, H); fused-cell scan over time.
-    The (F+H, 4H) weights stay VMEM-resident across the scan on TPU."""
+    """x: (B, T, F) -> final hidden (B, H).
+
+    One fused-sequence ``pallas_call`` per batch tile: the time loop runs
+    inside the kernel with the (F+H, 4H) weights VMEM-resident across all T
+    steps, replacing the per-timestep kernel-launch scan."""
+    interp = default_interpret() if interpret is None else interpret
+    h, _ = lstm_sequence_fused(x, wx, wh, b, interpret=interp)
+    return h
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def lstm_sequence_scan(x, wx, wh, b, interpret: bool | None = None):
+    """The pre-fusion path — ``lax.scan`` over the per-step cell kernel (one
+    launch per timestep).  Kept as the launch-overhead baseline the kernel
+    tests and benchmarks compare the fused path against."""
     interp = default_interpret() if interpret is None else interpret
     B = x.shape[0]
     H = wh.shape[0]

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the fused LSTM cell kernel."""
+"""Pure-jnp oracle for the fused LSTM kernels (per-step and full-sequence)."""
 from __future__ import annotations
 
 import jax
@@ -20,8 +20,10 @@ def lstm_cell_ref(x, h, c, wx, wh, b):
     return h_new.astype(h.dtype), c_new.astype(c.dtype)
 
 
-def lstm_sequence_ref(x, wx, wh, b):
-    """x: (B, T, F) -> final hidden (B, H)."""
+def lstm_sequence_ref(x, wx, wh, b, return_state: bool = False):
+    """Full-sequence oracle.  x: (B, T, F) -> final hidden (B, H), or the
+    final ``(h, c)`` pair with ``return_state=True`` — what the fused
+    sequence kernel's two outputs are asserted against."""
     B = x.shape[0]
     H = wh.shape[0]
     h = jnp.zeros((B, H), x.dtype)
@@ -33,4 +35,4 @@ def lstm_sequence_ref(x, wx, wh, b):
         return (h, c), None
 
     (h, c), _ = jax.lax.scan(step, (h, c), x.transpose(1, 0, 2))
-    return h
+    return (h, c) if return_state else h

@@ -85,10 +85,20 @@ def forward(cfg: ModelConfig, p: Params, x: jax.Array,
 
 
 def loss_fn(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array]):
-    """MSE regression loss.  batch: {"x": (B,lag,F), "y": (B,out)}."""
+    """MSE regression loss.  batch: {"x": (B,lag,F), "y": (B,out)} plus an
+    optional per-example validity "mask" (B,) — 1 for real examples, 0 for
+    the padding the fixed-shape-bucket trainer adds.  A masked batch yields
+    exactly the unpadded mean, so every shape bucket trains the same loss."""
     pred = forward(cfg, p, batch["x"])
     err = (pred - batch["y"]).astype(jnp.float32)
-    loss = jnp.mean(err * err)
+    sq = err * err
+    mask = batch.get("mask")
+    if mask is None:
+        loss = jnp.mean(sq)
+    else:
+        m = mask.astype(jnp.float32)[:, None]
+        denom = jnp.maximum(jnp.sum(m), 1.0) * sq.shape[-1]
+        loss = jnp.sum(sq * m) / denom
     return loss, {"mse": loss, "rmse": jnp.sqrt(loss)}
 
 

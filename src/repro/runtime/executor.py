@@ -26,10 +26,10 @@ is accounted in the ledger's ``queue`` column.
 
 Capacity is still a model (we cannot OOM a real Pi from this container):
 placing speed training on a site whose ``memory_bytes`` cannot hold
-``CostModel.train_memory_bytes`` records a failure, charges the thrash time
-of the attempt (the warmup-measured training wall), and never publishes a
-model — so the edge-centric speed layer degrades to serving the batch model,
-exactly the paper's Sec. 6.2 outcome.
+``CostModel.train_memory_bytes`` records a failure, charges the modeled
+thrash time of the attempt (``CostModel.oom_thrash_s``), and never publishes
+a model — so the edge-centric speed layer degrades to serving the batch
+model, exactly the paper's Sec. 6.2 outcome.
 """
 from __future__ import annotations
 
@@ -214,7 +214,6 @@ class BusExecutor:
         self._inject_t: Dict[int, float] = {}
         self.e2e_s: Dict[int, float] = {}
         self._free: Dict[str, List[float]] = {}
-        self._warm_train_s: float = 0.0
         self._wire()
 
     def _wire(self) -> None:
@@ -339,9 +338,11 @@ class BusExecutor:
                 f"{site.memory_bytes/1e9:.1f} GB")
             if self.strict:
                 raise CapacityError(self.failures[-1])
-            # the attempt thrashes the site for a full training duration
-            # before the OOM kill; no model is ever published
-            self._schedule("speed_training", self._warm_train_s, comm)
+            # the attempt thrashes the site for the modeled swap-paging
+            # duration before the OOM kill (CostModel.oom_thrash_s — the
+            # successful training wall is no proxy now that the compiled hot
+            # path runs in milliseconds); no model is ever published
+            self._schedule("speed_training", self.cost.oom_thrash_s, comm)
             return
         out = self.stages.speed_training(
             data={"x": msg.payload["x"], "y": msg.payload["y"]},
@@ -394,15 +395,15 @@ class BusExecutor:
     # -- driver --------------------------------------------------------------
 
     def _warmup(self, stream: WindowedStream, batch_params: Params, key) -> None:
-        """Compile every jit path once (the paper's steady-state windows) and
-        measure a reference training wall for the OOM-attempt thrash model."""
+        """Compile every jit path once, so the measured windows are the
+        paper's steady-state windows (on the compiled forecaster this also
+        populates the shape-bucket train-step cache)."""
         import jax
 
         data = stream.supervised(0)
-        out = self.stages.speed_training(
+        self.stages.speed_training(
             data=data, speed_params=None, batch_params=batch_params,
             key=jax.random.fold_in(key, 0))
-        self._warm_train_s = out["train_wall_s"]
         self.stages.batch_inference(batch_params=batch_params, x=data["x"])
 
     def run(self, stream: WindowedStream, batch_params: Params, key,

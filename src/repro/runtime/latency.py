@@ -32,6 +32,12 @@ class CostModel:
     # memory footprint of a training job (for the capacity model)
     train_memory_bytes: float = 6e9  # TF/Spark stack on the Pi blows 4 GB
     infer_memory_bytes: float = 0.5e9
+    # how long an over-capacity training attempt thrashes its site before
+    # the OOM kill (swap-paging the overshoot on Pi-class storage).  Modeled,
+    # not measured: this container cannot OOM a real Pi, and the *successful*
+    # training wall is no proxy for it — the compiled hot path dropped that
+    # wall to milliseconds while a thrashing attempt still takes seconds.
+    oom_thrash_s: float = 4.0
 
     def on(self, site_scale: float, seconds: float) -> float:
         return seconds / max(site_scale, 1e-9)

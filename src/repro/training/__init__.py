@@ -1,3 +1,8 @@
 from repro.training.optimizer import Optimizer, OptState, adamw, sgd, warmup_cosine  # noqa: F401
 from repro.training.train_loop import fit, make_eval_step, make_train_step  # noqa: F401
+from repro.training.compiled import (  # noqa: F401
+    CompiledForecaster,
+    bucket_examples,
+    pad_to_bucket,
+)
 from repro.training import checkpoint  # noqa: F401

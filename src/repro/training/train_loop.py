@@ -54,7 +54,14 @@ class FitResult:
 
 def batch_iterator(data: Dict[str, np.ndarray], batch_size: int, epochs: int,
                    key: jax.Array, shuffle: bool = True) -> Iterable[Batch]:
-    """Epoch-based minibatcher over array dicts (leading dim = examples)."""
+    """Epoch-based minibatcher over array dicts (leading dim = examples).
+
+    Every example is yielded every epoch: the final batch is ragged when
+    ``n % batch_size != 0`` (the speed layer's freshest records live in that
+    tail — dropping it, as this iterator once did, starved the model of up
+    to ``batch_size - 1`` of each window's newest examples).  The ragged
+    shape costs the legacy path one extra compile; the compiled hot path
+    (``repro.training.compiled``) avoids it by padding to shape buckets."""
     n = len(next(iter(data.values())))
     for e in range(epochs):
         if shuffle:
@@ -62,11 +69,9 @@ def batch_iterator(data: Dict[str, np.ndarray], batch_size: int, epochs: int,
             perm = np.asarray(jax.random.permutation(sub, n))
         else:
             perm = np.arange(n)
-        for i in range(0, n - batch_size + 1, batch_size):
+        for i in range(0, n, batch_size):
             idx = perm[i : i + batch_size]
             yield {k: jnp.asarray(v[idx]) for k, v in data.items()}
-        if n < batch_size:  # tiny windows: single ragged batch
-            yield {k: jnp.asarray(v) for k, v in data.items()}
 
 
 def fit(

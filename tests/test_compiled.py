@@ -1,0 +1,207 @@
+"""Compile-once hot-path tests: the cached epoch-scan train step must
+compile exactly once per shape bucket (zero retraces for windows 2..N), the
+fixed-shape padding must be loss-neutral (masked loss == unpadded loss), and
+the legacy minibatcher must no longer drop the ragged tail batch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import lstm_forecaster
+from repro.models import get_model
+from repro.training import CompiledForecaster
+from repro.training.train_loop import batch_iterator
+
+
+def _window(n, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, 5, 5)).astype(np.float32)
+    y = x[:, :, 0].mean(axis=1, keepdims=True).astype(np.float32)
+    return {"x": x, "y": y}
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("lstm-paper")
+
+
+# ---------------------------------------------------------------------------
+# compile-cache behavior
+# ---------------------------------------------------------------------------
+
+
+def test_windows_after_first_reuse_compiled_step(cfg):
+    """Retrace-count regression: windows 2..N of one shape bucket must reuse
+    window 1's compiled train step — zero new traces."""
+    fc = lstm_forecaster(cfg, epochs=2, batch_size=64)
+    eng = fc.engine
+    key = jax.random.PRNGKey(0)
+    for w in range(4):
+        fc.train(_window(150, seed=w), None, jax.random.fold_in(key, w))
+        if w == 0:
+            assert eng.retrace_count == 1
+    assert eng.retrace_count == 1, eng.trace_counts()
+    assert eng.cache_size == 1
+
+
+def test_new_shape_bucket_compiles_once_then_caches(cfg):
+    fc = lstm_forecaster(cfg, epochs=2, batch_size=64)
+    eng = fc.engine
+    key = jax.random.PRNGKey(0)
+    fc.train(_window(100), None, key)    # bucket 128
+    fc.train(_window(150), None, key)    # bucket 256: one new trace
+    fc.train(_window(200), None, key)    # bucket 256 again: cached
+    fc.train(_window(90), None, key)     # bucket 128 again: cached
+    assert eng.retrace_count == 2, eng.trace_counts()
+    assert eng.cache_size == 2
+
+
+def test_warm_start_shares_cold_start_executable(cfg):
+    """Warm and cold starts differ only in where params come from, so they
+    must share one compiled executable per bucket — a warm-start window must
+    never pay a second compile."""
+    fc = lstm_forecaster(cfg, epochs=2, batch_size=64, warm_start=True)
+    eng = fc.engine
+    key = jax.random.PRNGKey(0)
+    params, _ = fc.train(_window(150), None, key)            # cold
+    params2, _ = fc.train(_window(150, seed=1), params, key)  # warm
+    assert eng.retrace_count == 1, eng.trace_counts()
+    # donation safety: the caller-held tree survives the warm-start fit
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree_util.tree_leaves(params))
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree_util.tree_leaves(params2))
+
+
+def test_mask_blind_model_rejected(cfg):
+    """A model whose loss_fn ignores the validity mask must be rejected the
+    first time a window needs padding, not silently biased toward zeros."""
+    from repro.models import lstm as lstm_mod
+    from repro.models.model import Model
+
+    blind = Model(
+        cfg=cfg,
+        init=lambda key: lstm_mod.init_params(cfg, key),
+        loss_fn=lambda p, b: lstm_mod.loss_fn(
+            cfg, p, {"x": b["x"], "y": b["y"]}),  # drops the mask
+        prefill=None, decode_step=None, init_cache=None)
+    fc = CompiledForecaster(blind, epochs=1, batch_size=64)
+    with pytest.raises(ValueError, match="mask"):
+        fc.train(_window(150), None, jax.random.PRNGKey(0))
+    # no padding needed -> mask is irrelevant and the model is fine
+    params, _ = fc.train(_window(64), None, jax.random.PRNGKey(0))
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree_util.tree_leaves(params))
+
+
+def test_compiled_fit_learns(cfg):
+    """Parity with test_fit_reduces_lstm_loss on the compiled path."""
+    model = get_model(cfg)
+    data = _window(256)
+    fc = CompiledForecaster(model, epochs=30, batch_size=64, lr=1e-2)
+    params, wall = fc.train(data, None, jax.random.PRNGKey(0))
+    loss, _ = model.loss_fn(params, {k: jnp.asarray(v)
+                                     for k, v in data.items()})
+    assert float(loss) < 0.05, f"compiled fit failed to learn: {float(loss)}"
+    assert wall > 0
+    # one epoch-scan dispatch covers epochs*steps updates
+    assert fc.last_losses.shape == (30 * (256 // 64),)
+
+
+# ---------------------------------------------------------------------------
+# fixed-shape bucketing + masking
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_examples_shapes():
+    from repro.training import bucket_examples
+
+    assert bucket_examples(64, 64) == 64
+    assert bucket_examples(65, 64) == 128
+    assert bucket_examples(150, 64) == 256
+    assert bucket_examples(245, 64) == 256
+    assert bucket_examples(10, 64) == 64
+    with pytest.raises(ValueError):
+        bucket_examples(0, 64)
+
+
+def test_pad_to_bucket_mask():
+    from repro.training import pad_to_bucket
+
+    data = _window(150)
+    padded = pad_to_bucket(data, 256)
+    assert padded["x"].shape == (256, 5, 5)
+    assert padded["mask"].sum() == 150
+    assert (padded["mask"][:150] == 1).all() and (padded["mask"][150:] == 0).all()
+    np.testing.assert_array_equal(padded["x"][:150], data["x"])
+    assert (padded["x"][150:] == 0).all()
+
+
+def test_padded_masked_loss_equals_unpadded_loss(cfg):
+    """Padding to a shape bucket with the validity mask threaded into
+    loss_fn is numerically invisible: the masked loss on the padded batch
+    equals the plain loss on the unpadded batch."""
+    from repro.training import bucket_examples, pad_to_bucket
+
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    data = _window(150)
+    nb = bucket_examples(150, 64)
+    padded = pad_to_bucket(data, nb)
+
+    plain, plain_m = model.loss_fn(
+        params, {k: jnp.asarray(v) for k, v in data.items()})
+    masked, masked_m = model.loss_fn(
+        params, {k: jnp.asarray(v) for k, v in padded.items()})
+    assert float(masked) == pytest.approx(float(plain), rel=1e-6)
+    assert float(masked_m["rmse"]) == pytest.approx(float(plain_m["rmse"]),
+                                                    rel=1e-6)
+    # all-ones mask on the unpadded batch is also a no-op
+    allones, _ = model.loss_fn(
+        params, {**{k: jnp.asarray(v) for k, v in data.items()},
+                 "mask": jnp.ones((150,), jnp.float32)})
+    assert float(allones) == pytest.approx(float(plain), rel=1e-6)
+
+
+def test_compiled_predict_matches_unpadded(cfg):
+    """Inference-shape bucketing (pad + slice) must not change predictions."""
+    from repro.models import lstm as lstm_mod
+
+    fc = lstm_forecaster(cfg, epochs=1, batch_size=64)
+    data = _window(150)
+    params, _ = fc.train(data, None, jax.random.PRNGKey(0))
+    got = fc.predict(params, data["x"])
+    want = np.asarray(lstm_mod.predict(cfg, params, jnp.asarray(data["x"])))
+    np.testing.assert_allclose(got, want, atol=1e-6, rtol=1e-6)
+    assert got.shape == (150, 1)
+
+
+# ---------------------------------------------------------------------------
+# legacy minibatcher: ragged tail no longer dropped
+# ---------------------------------------------------------------------------
+
+
+def test_batch_iterator_yields_tail_examples():
+    """n % batch_size tail examples must be trained every epoch (they are the
+    window's freshest records)."""
+    n, bs, epochs = 100, 64, 3
+    data = {"x": np.arange(n, dtype=np.float32).reshape(n, 1)}
+    seen_per_epoch = n_batches = 0
+    seen = set()
+    for batch in batch_iterator(data, bs, epochs, jax.random.PRNGKey(0)):
+        vals = np.asarray(batch["x"]).ravel()
+        seen_per_epoch += len(vals)
+        seen.update(int(v) for v in vals)
+        n_batches += 1
+    assert n_batches == epochs * 2          # 64 + ragged 36 per epoch
+    assert seen_per_epoch == epochs * n     # every example, every epoch
+    assert seen == set(range(n))
+
+
+def test_batch_iterator_tiny_window_single_batch():
+    n, bs = 10, 64
+    data = {"x": np.arange(n, dtype=np.float32).reshape(n, 1)}
+    batches = list(batch_iterator(data, bs, 2, jax.random.PRNGKey(0)))
+    assert len(batches) == 2
+    assert all(b["x"].shape[0] == n for b in batches)

@@ -62,6 +62,43 @@ def test_lstm_sequence_matches_ref():
                                rtol=2e-5)
 
 
+@pytest.mark.parametrize("B,T,F,H", [(8, 5, 5, 40), (128, 5, 5, 40),
+                                     (33, 7, 3, 16), (1, 1, 2, 8),
+                                     (130, 12, 4, 24)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lstm_sequence_fused_sweep(B, T, F, H, dtype):
+    """The fused-sequence kernel (time loop inside one pallas_call) against
+    the full-sequence oracle — both final h and final c."""
+    from repro.kernels.lstm_cell.kernel import lstm_sequence_fused
+
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (B, T, F), dtype)
+    wx = (jax.random.normal(ks[1], (F, 4 * H)) * 0.2).astype(dtype)
+    wh = (jax.random.normal(ks[2], (H, 4 * H)) * 0.2).astype(dtype)
+    b = (jax.random.normal(ks[3], (4 * H,)) * 0.2).astype(dtype)
+    h1, c1 = lstm_sequence_fused(x, wx, wh, b, interpret=True, block_b=32)
+    h2, c2 = lstm_sequence_ref(x, wx, wh, b, return_state=True)
+    np.testing.assert_allclose(np.asarray(h1, np.float32),
+                               np.asarray(h2, np.float32), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(c1, np.float32),
+                               np.asarray(c2, np.float32), **tol(dtype))
+
+
+def test_lstm_sequence_fused_agrees_with_scanned_cells():
+    """Fused path vs the pre-fusion per-timestep kernel scan it replaced."""
+    from repro.kernels.lstm_cell.ops import lstm_sequence_scan
+
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (16, 5, 5))
+    wx = jax.random.normal(ks[1], (5, 160)) * 0.2
+    wh = jax.random.normal(ks[2], (40, 160)) * 0.2
+    b = jax.random.normal(ks[3], (160,)) * 0.2
+    h_fused = lstm_sequence(x, wx, wh, b, interpret=True)
+    h_scan = lstm_sequence_scan(x, wx, wh, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(h_fused), np.asarray(h_scan),
+                               atol=2e-5, rtol=2e-5)
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
