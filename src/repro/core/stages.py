@@ -169,6 +169,13 @@ class SpeedTraining(Stage):
                 speed_params: Optional[Params], batch_params: Params,
                 key) -> Dict[str, Any]:
         fc = self.forecaster
+        if speed_params is not None:
+            # the serving model may be the int8-synced tree (QTensor leaves);
+            # training runs in float whatever the Forecaster implementation,
+            # so dequantize at the stage boundary (no-op on a float tree)
+            from repro.serving.quantize import dequantize_tree
+
+            speed_params = dequantize_tree(speed_params)
         params, train_wall_s = fc.train(data, speed_params, key)
         x, y = data["x"], data["y"]
         eval_preds = eval_y = None

@@ -7,7 +7,26 @@ from repro.serving.quantize import QTensor
 
 
 def qmatmul(x, qt: QTensor, interpret=None):
-    """x: (..., K) @ qt -> (..., N) via the fused dequant kernel."""
+    """``x @ dequant(qt)`` via the fused int8 dequant-matmul kernel.
+
+    Shapes/dtypes: ``x`` is (..., K) float (f32 or bf16); ``qt`` wraps an
+    int8 weight matrix (K, N) with a per-output-channel f32 scale (N,); the
+    result is (..., N) in ``x.dtype``.  Leading dims are flattened to one M
+    axis for the kernel's (block_m, block_n) output tiling and restored
+    after.  The scale multiplies the f32 accumulator once per output column
+    after the K loop — never per weight — and weights stay int8 all the way
+    into VMEM, quartering (vs f32) the weight HBM traffic that dominates
+    small-batch edge inference.
+
+    ``interpret=None`` resolves via ``repro.kernels.default_interpret()``:
+    compiled Mosaic on a real TPU backend, the Pallas interpreter elsewhere,
+    so CPU CI validates the exact TPU code path.
+
+    Callers: ``repro.models.lstm._forward_int8`` — edge inference on an
+    int8-synced speed model (``BusExecutor(quantized_sync=True)``, the
+    paper's TFLite-on-Pi analog) — and the int8-inference timings in
+    ``benchmarks/bench_hotpath.py``.
+    """
     interp = default_interpret() if interpret is None else interpret
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])

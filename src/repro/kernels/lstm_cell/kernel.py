@@ -16,6 +16,17 @@ weight blocks are resident for all T steps, the h/c carry lives in
 registers/VMEM, and only the final state is written out — one launch per
 batch tile for the whole sequence.
 
+Training differentiates through the same fused recurrence:
+``lstm_sequence_fwd_train`` is the forward that additionally materializes the
+per-step residuals the backward needs (post-activation gates, cell and hidden
+sequences), and ``lstm_sequence_bwd`` runs the reverse-time loop in one
+``pallas_call`` — producing dx per batch tile and accumulating the weight
+gradients (dwx, dwh, db) across the batch grid into broadcast output blocks.
+``ops.lstm_sequence`` stitches the pair into a ``jax.custom_vjp`` so the
+speed layer's cached train step runs fused kernels end to end instead of
+autodiff-through-scan (reverse-mode AD does not lower through a compiled
+Mosaic ``pallas_call`` anyway).
+
 Tiling: grid over batch tiles; weights are broadcast blocks (index_map pins
 them to block 0).  MXU alignment: for the paper model (H=40, F=5, T=5) the
 shapes are tiny and the kernel is bandwidth-trivial; for wider LSTMs choose
@@ -148,3 +159,222 @@ def lstm_sequence_fused(x, wx, wh, b, *, block_b: int = 128,
         ],
         interpret=interpret,
     )(x, wx, wh, b)
+
+
+# ---------------------------------------------------------------------------
+# Training pair: residual-emitting forward + fused backward
+# ---------------------------------------------------------------------------
+
+
+def _sequence_train_kernel(x_ref, wx_ref, wh_ref, b_ref,
+                           gates_out, c_out, h_out):
+    """Forward identical to ``_sequence_kernel`` but materializing the
+    backward's residuals: post-activation gates (bb, T, 4H) and the full cell
+    and hidden state sequences (bb, T, H) — all f32, so the VJP reconstructs
+    the recurrence without re-running any matmul."""
+    x = x_ref[...].astype(jnp.float32)        # (bb, T, F)
+    wx = wx_ref[...].astype(jnp.float32)
+    wh = wh_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    bb, T, _ = x.shape
+    H = wh.shape[0]
+
+    def step(t, carry):
+        h, c, gates, cs, hs = carry
+        x_t = jax.lax.dynamic_slice_in_dim(x, t, 1, axis=1)[:, 0, :]
+        z = jnp.dot(x_t, wx, preferred_element_type=jnp.float32)
+        z = z + jnp.dot(h, wh, preferred_element_type=jnp.float32) + b[None, :]
+        i = jax.nn.sigmoid(z[:, :H])
+        f = jax.nn.sigmoid(z[:, H : 2 * H])
+        g = jnp.tanh(z[:, 2 * H : 3 * H])
+        o = jax.nn.sigmoid(z[:, 3 * H :])
+        c_new = f * c + i * g
+        h_new = o * jnp.tanh(c_new)
+        g4 = jnp.concatenate([i, f, g, o], axis=-1)
+        gates = jax.lax.dynamic_update_slice_in_dim(
+            gates, g4[:, None, :], t, axis=1)
+        cs = jax.lax.dynamic_update_slice_in_dim(
+            cs, c_new[:, None, :], t, axis=1)
+        hs = jax.lax.dynamic_update_slice_in_dim(
+            hs, h_new[:, None, :], t, axis=1)
+        return h_new, c_new, gates, cs, hs
+
+    init = (
+        jnp.zeros((bb, H), jnp.float32),
+        jnp.zeros((bb, H), jnp.float32),
+        jnp.zeros((bb, T, 4 * H), jnp.float32),
+        jnp.zeros((bb, T, H), jnp.float32),
+        jnp.zeros((bb, T, H), jnp.float32),
+    )
+    _, _, gates, cs, hs = jax.lax.fori_loop(0, T, step, init)
+    gates_out[...] = gates
+    c_out[...] = cs
+    h_out[...] = hs
+
+
+@partial(jax.jit, static_argnames=("block_b", "interpret"))
+def lstm_sequence_fwd_train(x, wx, wh, b, *, block_b: int = 128,
+                            interpret: bool | None = None):
+    """Residual-emitting forward for the custom VJP.  x: (B, T, F) ->
+    (gates (B, T, 4H), c_seq (B, T, H), h_seq (B, T, H)), all f32; the primal
+    output is ``h_seq[:, -1]``."""
+    interpret = default_interpret() if interpret is None else interpret
+    B, T, F = x.shape
+    H = wh.shape[0]
+    bb = min(block_b, B)
+    grid = (pl.cdiv(B, bb),)
+    return pl.pallas_call(
+        _sequence_train_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, T, F), lambda i: (i, 0, 0)),
+            pl.BlockSpec((F, 4 * H), lambda i: (0, 0)),
+            pl.BlockSpec((H, 4 * H), lambda i: (0, 0)),
+            pl.BlockSpec((4 * H,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, T, 4 * H), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, T, H), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, T, H), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, 4 * H), jnp.float32),
+            jax.ShapeDtypeStruct((B, T, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, T, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, wx, wh, b)
+
+
+def _sequence_bwd_kernel(x_ref, gates_ref, c_ref, h_ref, wx_ref, wh_ref,
+                         dh_ref, dc_ref, dx_out, dwx_out, dwh_out, db_out):
+    """Reverse-time loop for one batch tile.  dx is written per tile; the
+    weight gradients are *accumulated across the batch grid*: their output
+    blocks are pinned to block 0, initialized on the first grid step, and
+    read-modify-written on every later one (the TPU grid is sequential, so
+    revisited output blocks persist — the standard reduction pattern).
+
+    Batch padding rows are exactly zero in every input (the ops wrapper pads
+    with zeros), which makes their dz — and hence their contribution to the
+    accumulated weight gradients — exactly zero too."""
+    x = x_ref[...].astype(jnp.float32)        # (bb, T, F)
+    gates = gates_ref[...]                    # (bb, T, 4H) f32
+    cs = c_ref[...]                           # (bb, T, H) f32
+    hs = h_ref[...]                           # (bb, T, H) f32
+    wx = wx_ref[...].astype(jnp.float32)
+    wh = wh_ref[...].astype(jnp.float32)
+    dh0 = dh_ref[...].astype(jnp.float32)     # (bb, H) cotangent of final h
+    dc0 = dc_ref[...].astype(jnp.float32)     # (bb, H) cotangent of final c
+    bb, T, F = x.shape
+    H = wh.shape[0]
+
+    def step(s, carry):
+        dh, dc, dxs, dwx, dwh, db = carry
+        t = T - 1 - s
+        t_prev = jnp.maximum(t - 1, 0)
+        g4 = jax.lax.dynamic_slice_in_dim(gates, t, 1, axis=1)[:, 0, :]
+        i, f = g4[:, :H], g4[:, H : 2 * H]
+        g, o = g4[:, 2 * H : 3 * H], g4[:, 3 * H :]
+        c_t = jax.lax.dynamic_slice_in_dim(cs, t, 1, axis=1)[:, 0, :]
+        first = (t == 0)
+        c_prev = jnp.where(
+            first, 0.0,
+            jax.lax.dynamic_slice_in_dim(cs, t_prev, 1, axis=1)[:, 0, :])
+        h_prev = jnp.where(
+            first, 0.0,
+            jax.lax.dynamic_slice_in_dim(hs, t_prev, 1, axis=1)[:, 0, :])
+
+        tanh_c = jnp.tanh(c_t)
+        do = dh * tanh_c
+        dct = dc + dh * o * (1.0 - tanh_c * tanh_c)
+        dz = jnp.concatenate(
+            [dct * g * i * (1.0 - i),            # d z_i
+             dct * c_prev * f * (1.0 - f),       # d z_f
+             dct * i * (1.0 - g * g),            # d z_g
+             do * o * (1.0 - o)],                # d z_o
+            axis=-1)                             # (bb, 4H)
+
+        x_t = jax.lax.dynamic_slice_in_dim(x, t, 1, axis=1)[:, 0, :]
+        dwx = dwx + jnp.dot(x_t.T, dz, preferred_element_type=jnp.float32)
+        dwh = dwh + jnp.dot(h_prev.T, dz, preferred_element_type=jnp.float32)
+        db = db + jnp.sum(dz, axis=0)
+        dx_t = jnp.dot(dz, wx.T, preferred_element_type=jnp.float32)
+        dxs = jax.lax.dynamic_update_slice_in_dim(
+            dxs, dx_t[:, None, :], t, axis=1)
+        dh = jnp.dot(dz, wh.T, preferred_element_type=jnp.float32)
+        dc = dct * f
+        return dh, dc, dxs, dwx, dwh, db
+
+    init = (
+        dh0, dc0,
+        jnp.zeros((bb, T, F), jnp.float32),
+        jnp.zeros((F, 4 * H), jnp.float32),
+        jnp.zeros((H, 4 * H), jnp.float32),
+        jnp.zeros((4 * H,), jnp.float32),
+    )
+    _, _, dxs, dwx, dwh, db = jax.lax.fori_loop(0, T, step, init)
+    dx_out[...] = dxs.astype(dx_out.dtype)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init_weight_grads():
+        dwx_out[...] = jnp.zeros_like(dwx_out)
+        dwh_out[...] = jnp.zeros_like(dwh_out)
+        db_out[...] = jnp.zeros_like(db_out)
+
+    dwx_out[...] += dwx
+    dwh_out[...] += dwh
+    db_out[...] += db
+
+
+@partial(jax.jit, static_argnames=("block_b", "interpret"))
+def lstm_sequence_bwd(x, gates, c_seq, h_seq, wx, wh, dh, dc, *,
+                      block_b: int = 128, interpret: bool | None = None):
+    """Fused backward pass over the whole sequence.
+
+    Inputs are the primal ``x`` plus the residuals ``lstm_sequence_fwd_train``
+    emitted and the cotangents of the final ``(h, c)``; returns
+    ``(dx (B, T, F), dwx (F, 4H), dwh (H, 4H), db (4H,))``, all f32.  The
+    batch is zero-padded to a tile multiple here so padded rows contribute
+    exact zeros to the grid-accumulated weight gradients."""
+    interpret = default_interpret() if interpret is None else interpret
+    B, T, F = x.shape
+    H = wh.shape[0]
+    bb = min(block_b, B)
+    pad = (-B) % bb
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
+        gates = jnp.pad(gates, ((0, pad), (0, 0), (0, 0)))
+        c_seq = jnp.pad(c_seq, ((0, pad), (0, 0), (0, 0)))
+        h_seq = jnp.pad(h_seq, ((0, pad), (0, 0), (0, 0)))
+        dh = jnp.pad(dh, ((0, pad), (0, 0)))
+        dc = jnp.pad(dc, ((0, pad), (0, 0)))
+    Bp = B + pad
+    grid = (Bp // bb,)
+    dx, dwx, dwh, db = pl.pallas_call(
+        _sequence_bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, T, F), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, T, 4 * H), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, T, H), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, T, H), lambda i: (i, 0, 0)),
+            pl.BlockSpec((F, 4 * H), lambda i: (0, 0)),
+            pl.BlockSpec((H, 4 * H), lambda i: (0, 0)),
+            pl.BlockSpec((bb, H), lambda i: (i, 0)),
+            pl.BlockSpec((bb, H), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, T, F), lambda i: (i, 0, 0)),
+            pl.BlockSpec((F, 4 * H), lambda i: (0, 0)),   # accumulated
+            pl.BlockSpec((H, 4 * H), lambda i: (0, 0)),   # accumulated
+            pl.BlockSpec((4 * H,), lambda i: (0,)),       # accumulated
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, T, F), jnp.float32),
+            jax.ShapeDtypeStruct((F, 4 * H), jnp.float32),
+            jax.ShapeDtypeStruct((H, 4 * H), jnp.float32),
+            jax.ShapeDtypeStruct((4 * H,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, gates, c_seq, h_seq, wx, wh, dh, dc)
+    return dx[:B], dwx, dwh, db

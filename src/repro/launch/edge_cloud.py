@@ -100,13 +100,15 @@ def run_real(args) -> None:
     for name in deps:
         dep = ALL_DEPLOYMENTS[name]()
         ex = BusExecutor(stages, dep, paper_topology(), cost,
-                         window_period_s=args.period)
+                         window_period_s=args.period,
+                         quantized_sync=args.quantized)
         res = ex.run(stream, bp, jax.random.PRNGKey(1))
         e2e[name] = res.mean_e2e_s()
         failures[name] = res.failures
         print(f"\n[{dep.name}] {args.windows} windows, measured Table-3 "
               f"breakdown ({'static' if args.static else 'dynamic'} "
-              f"weighting, real LSTM compute):")
+              f"weighting, real LSTM compute"
+              f"{', int8 sync' if args.quantized else ''}):")
         _print_table(res.table3(),
                      e2e=res.mean_e2e_s() if res.e2e_s else None)
         if res.records:
@@ -183,7 +185,9 @@ def main() -> None:
     p.add_argument("--static", action="store_true",
                    help="static 5:5 weighting instead of dynamic")
     p.add_argument("--quantized", action="store_true",
-                   help="int8 model sync (4x smaller transfers)")
+                   help="int8 model sync: 4x smaller transfers; with --real "
+                        "the edge also serves the quantized model through "
+                        "the int8 dequant-matmul kernel")
     p.add_argument("--fast", action="store_true")
     p.add_argument("--real", action="store_true",
                    help="run real LSTM compute through the TopicBus "

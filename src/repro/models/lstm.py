@@ -58,11 +58,66 @@ def cell_step(p: Params, x_t: jax.Array, h: jax.Array, c: jax.Array):
     return h_new, c_new
 
 
+def _has_qtensor(p: Params) -> bool:
+    from repro.serving.quantize import QTensor
+
+    return any(isinstance(leaf, QTensor) for leaf in
+               jax.tree_util.tree_leaves(
+                   p, is_leaf=lambda x: isinstance(x, QTensor)))
+
+
+def _mm(x: jax.Array, w) -> jax.Array:
+    """x @ w, dispatching the fused int8 dequant-matmul kernel when ``w`` is
+    a quantized ``QTensor`` leaf (float leaves multiply as usual, so a
+    partially-quantized tree — tiny heads kept in float — still works)."""
+    from repro.serving.quantize import QTensor
+
+    if isinstance(w, QTensor):
+        from repro.kernels.int8_matmul.ops import qmatmul
+
+        return qmatmul(x, w)
+    return x @ w
+
+
+def _forward_int8(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Edge inference on an int8-synced speed model (the TFLite-on-Pi
+    analog): every quantized weight matrix dispatches ``qmatmul`` — the
+    whole-sequence input projection in one kernel call, the recurrent
+    projection once per step inside the scan — and activations stay float
+    (weight-only quantization, what the accuracy test pins)."""
+    c = cfg.lstm
+    B, T, _ = x.shape
+    lp = p["lstm"]
+    zx = _mm(x.reshape(B * T, -1), lp["kernel"]).reshape(B, T, 4 * c.hidden)
+    h0 = jnp.zeros((B, c.hidden), x.dtype)
+    c0 = jnp.zeros((B, c.hidden), x.dtype)
+    bias = lp["bias"]
+
+    def step(carry, z_t):
+        h, cc = carry
+        z = z_t + _mm(h, lp["recurrent"]) + bias
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+        g = jnp.tanh(g)
+        c_new = f * cc + i * g
+        h_new = o * jnp.tanh(c_new)
+        return (h_new, c_new), None
+
+    (h, _), _ = jax.lax.scan(step, (h0, c0), zx.transpose(1, 0, 2))
+    d = jax.nn.relu(_mm(h, p["dense"]["dense_w"]) + p["dense"]["dense_b"])
+    return _mm(d, p["head"]["head_w"]) + p["head"]["head_b"]
+
+
 def forward(cfg: ModelConfig, p: Params, x: jax.Array,
             use_pallas: Optional[bool] = None) -> jax.Array:
-    """x: (B, lag, F) -> prediction (B, out_dim)."""
+    """x: (B, lag, F) -> prediction (B, out_dim).
+
+    A params tree containing ``QTensor`` leaves (an int8-synced speed model)
+    routes to the quantized inference path regardless of ``use_pallas``."""
     c = cfg.lstm
     B = x.shape[0]
+    if _has_qtensor(p):
+        return _forward_int8(cfg, p, x)
     use_pallas = cfg.use_pallas if use_pallas is None else use_pallas
     if use_pallas:
         from repro.kernels.lstm_cell import ops as lstm_ops

@@ -179,6 +179,13 @@ class BusExecutor:
     communication on stream consumers) and the training-job memory footprint
     (``train_memory_bytes``, the capacity model).  All compute is measured;
     all transfer sizes are the real array/parameter byte counts.
+
+    ``quantized_sync=True`` turns on the int8 model-sync path (the paper's
+    TFLite-on-Pi analog): the training site quantizes the fresh speed model
+    (``serving.quantize.quantize_tree``) before publishing it, the model
+    topic carries the ~4x smaller int8 byte count, and the serving side runs
+    quantized inference (``models.lstm`` dispatches the fused
+    ``int8_matmul`` kernel on ``QTensor`` leaves).
     """
 
     def __init__(
@@ -191,6 +198,8 @@ class BusExecutor:
         start_window: int = 1,
         window_period_s: float = 30.0,
         strict_capacity: bool = False,
+        quantized_sync: bool = False,
+        quant_min_size: int = 64,
     ):
         self.stages = stages
         self.dep = deployment
@@ -199,6 +208,8 @@ class BusExecutor:
         self.start_window = start_window
         self.period = window_period_s
         self.strict = strict_capacity
+        self.quantized_sync = quantized_sync
+        self.quant_min_size = quant_min_size
 
     # -- per-run state -------------------------------------------------------
 
@@ -351,13 +362,24 @@ class BusExecutor:
         self._train_walls[w] = out["train_wall_s"]
         if w in self._records:
             self._records[w].t_speed_train = out["train_wall_s"]
+        params_pub = out["params"]
+        if self.quantized_sync:
+            # int8 sync (the paper's TFLite-conversion analog): the training
+            # site quantizes before the transfer, so the model topic carries
+            # ~4x fewer bytes — QTensor is a pytree, so _nbytes measures the
+            # real int8+scale size — and the edge serves the quantized model
+            # (lstm.forward dispatches the int8 kernel on QTensor leaves)
+            from repro.serving.quantize import quantize_tree
+
+            params_pub = quantize_tree(out["params"],
+                                       min_size=self.quant_min_size)
         self._schedule(
             "speed_training", out.wall_s, comm,
             lambda: self.bus.publish(
                 T_MODEL,
-                {"window": w, "params": out["params"],
+                {"window": w, "params": params_pub,
                  "eval_preds": out["eval_preds"], "eval_y": out["eval_y"]},
-                _nbytes(out["params"]), self.dep.site_of("speed_training")))
+                _nbytes(params_pub), self.dep.site_of("speed_training")))
 
     def _on_model_sync(self, msg: Message) -> None:
         if msg.payload["window"] <= self._model.window:
@@ -397,14 +419,24 @@ class BusExecutor:
     def _warmup(self, stream: WindowedStream, batch_params: Params, key) -> None:
         """Compile every jit path once, so the measured windows are the
         paper's steady-state windows (on the compiled forecaster this also
-        populates the shape-bucket train-step cache)."""
+        populates the shape-bucket train-step cache).  With int8 sync on,
+        that includes the QTensor-structured predict — a pytree structure
+        jit has never traced — so the first measured speed_inference on a
+        quantized model doesn't swallow its compile."""
         import jax
 
         data = stream.supervised(0)
-        self.stages.speed_training(
+        tr = self.stages.speed_training(
             data=data, speed_params=None, batch_params=batch_params,
             key=jax.random.fold_in(key, 0))
         self.stages.batch_inference(batch_params=batch_params, x=data["x"])
+        if self.quantized_sync and len(data["x"]) > 0:
+            from repro.serving.quantize import quantize_tree
+
+            self.stages.speed_inference(
+                speed_params=quantize_tree(tr["params"],
+                                           min_size=self.quant_min_size),
+                x=data["x"])
 
     def run(self, stream: WindowedStream, batch_params: Params, key,
             n_windows: Optional[int] = None) -> BusRunResult:

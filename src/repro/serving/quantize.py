@@ -11,7 +11,13 @@ tiny leaves stay in float).
     y = int8_matmul(x, qp)                    # fused dequant matmul
 
 Quantized checkpoints also shrink the paper's per-window model-sync transfer
-(model_nbytes) by ~4x — the runtime simulation picks that up directly.
+(model_nbytes) by ~4x.  ``QTensor`` is registered as a JAX pytree, so a
+quantized params tree flows through ``jax.jit``, ``tree_map`` and the
+executors' real byte-count accounting unchanged: the ``BusExecutor``'s
+int8 sync path (``quantized_sync=True``) publishes ``quantize_tree`` output
+on the model topic and the measured transfer size is the int8 size, while
+``repro.models.lstm.forward`` detects QTensor leaves and dispatches the
+fused ``int8_matmul`` kernel for edge inference.
 """
 from __future__ import annotations
 
@@ -30,7 +36,11 @@ MIN_QUANT_SIZE = 1024
 
 @dataclass(frozen=True)
 class QTensor:
-    """Symmetric per-channel int8 tensor: w ~ q * scale (last dim = out)."""
+    """Symmetric per-channel int8 tensor: w ~ q * scale (last dim = out).
+
+    Registered as a pytree node (children: ``q``, ``scale``; static aux:
+    ``orig_dtype``), so quantized trees jit, tree_map and byte-count like any
+    other params pytree."""
 
     q: jax.Array  # int8, same shape as the original
     scale: jax.Array  # f32, shape = original.shape[-1:]
@@ -39,6 +49,13 @@ class QTensor:
     @property
     def nbytes(self) -> int:
         return int(self.q.size) + int(self.scale.size) * 4
+
+
+jax.tree_util.register_pytree_node(
+    QTensor,
+    lambda qt: ((qt.q, qt.scale), qt.orig_dtype),
+    lambda aux, ch: QTensor(q=ch[0], scale=ch[1], orig_dtype=aux),
+)
 
 
 def quantize(w: jax.Array) -> QTensor:
@@ -65,19 +82,22 @@ def int8_matmul(x: jax.Array, qt: QTensor) -> jax.Array:
     return (acc * qt.scale.reshape((1,) * (acc.ndim - 1) + (-1,))).astype(x.dtype)
 
 
-def _is_quantizable(x) -> bool:
+def _is_quantizable(x, min_size: int = MIN_QUANT_SIZE) -> bool:
     return (
         hasattr(x, "dtype")
         and jnp.issubdtype(x.dtype, jnp.floating)
         and x.ndim >= 2
-        and x.size >= MIN_QUANT_SIZE
+        and x.size >= min_size
     )
 
 
-def quantize_tree(params: Params) -> Params:
-    """Quantize every large floating leaf; small leaves pass through."""
+def quantize_tree(params: Params, min_size: int = MIN_QUANT_SIZE) -> Params:
+    """Quantize every floating matrix leaf of at least ``min_size`` elements;
+    smaller leaves (and all 1-D leaves: biases, norm gains) pass through in
+    float.  The default threshold suits LLM-scale trees; the speed-layer sync
+    path lowers it so the paper's tiny LSTM (10,981 params) quantizes too."""
     return jax.tree_util.tree_map(
-        lambda x: quantize(x) if _is_quantizable(x) else x, params
+        lambda x: quantize(x) if _is_quantizable(x, min_size) else x, params
     )
 
 

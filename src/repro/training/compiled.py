@@ -208,6 +208,11 @@ class CompiledForecaster:
         init_key, perm_key = jax.random.split(key)
         warm = self.warm_start and params is not None
         if warm:
+            # an int8-synced serving model (QTensor leaves) can seed a warm
+            # start, but training runs in float: dequantize first
+            from repro.serving.quantize import dequantize_tree
+
+            params = dequantize_tree(params)
             # the fit executable donates its params buffer; the caller-held
             # tree (the serving model) must survive, so warm starts hand the
             # executable a private copy
