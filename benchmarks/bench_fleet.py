@@ -1,0 +1,322 @@
+"""Fleet-scale speed-layer benchmark: N streams per node, tracked as
+``BENCH_fleet.json`` from this PR onward.
+
+The single-stream hot path (``BENCH_hotpath.json``) made one window's
+retrain cheap; serving a *fleet* of sensors from one node multiplies every
+per-window cost by N unless the fleet trains together.  This benchmark pins
+the two fleet properties the executors rely on:
+
+* ``fleet_training`` — per-window wall of the one-dispatch vmapped fleet
+  fit (``FleetForecaster.train_fleet``) vs N sequential single-stream
+  ``CompiledForecaster`` fits over the same windows and keys, interleaved
+  window by window so host noise biases neither side.  Records per-window
+  walls, steady-state streams/sec for both paths, the dispatch counts (the
+  fleet path must be exactly one per window), the retrace counters (zero
+  new traces after each (stream-bucket, shape-bucket)'s first window), and
+  the max parameter divergence of fleet-vs-sequential fits (vmap batching
+  tolerance, not a semantic difference).
+
+* ``executor_parity`` — a full ``InProcessFleetExecutor`` run (ungated)
+  against N sequential ``InProcessExecutor`` runs with the same per-stream
+  root keys: max per-window RMSE divergence across every stream, plus the
+  fleet run's train-dispatch count.
+
+* ``drift_gated`` — drift-gated retraining vs the paper's every-window
+  policy on the stationary and abrupt scenarios: the stationary fleet must
+  *skip* retrains (>0, counted), and the abrupt fleet's gated accuracy must
+  track the every-window accuracy within tolerance.
+
+    PYTHONPATH=src python -m benchmarks.bench_fleet            # paper-ish
+    PYTHONPATH=src python -m benchmarks.bench_fleet --smoke    # CI: seconds
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+
+def _fleet_streams(n_streams: int, n_windows: int, records_per_window: int,
+                   scenario: str, seed: int = 0):
+    """N correlated turbines, each scaled by its own history — the exact
+    construction the launcher's fleet mode runs
+    (``streams.sources.fleet_windowed_streams``)."""
+    import numpy as np
+
+    from repro.streams.sources import fleet_windowed_streams
+
+    alphas = np.full(5, 1.5e-3) if scenario == "gradual" else None
+    return fleet_windowed_streams(n_streams, n_windows, records_per_window,
+                                  scenario, seed=seed, alphas=alphas)
+
+
+def _summary(walls: List[float]) -> Dict:
+    steady = walls[1:] if len(walls) > 1 else walls
+    mean_steady = sum(steady) / len(steady)
+    return {
+        "per_window_wall_s": walls,
+        "first_window_wall_s": walls[0],
+        "steady_state_wall_s": mean_steady,
+        "steady_state_median_s": sorted(steady)[len(steady) // 2],
+    }
+
+
+def _bench_fleet_training(cfg, streams, epochs: int, batch_size: int,
+                          key) -> Dict:
+    """The training hot path alone: one-dispatch fleet fit vs N sequential
+    single-stream fits, window-interleaved, identical per-stream keys."""
+    import jax
+    import numpy as np
+
+    from repro.core import lstm_fleet_forecaster, lstm_forecaster
+    from repro.runtime import fleet_key_chains
+
+    ids = list(streams)
+    n_windows = min(len(s) for s in streams.values())
+    keys = fleet_key_chains(key, ids, n_windows)
+
+    ff = lstm_fleet_forecaster(cfg, epochs=epochs, batch_size=batch_size)
+    seq = {sid: lstm_forecaster(cfg, epochs=epochs, batch_size=batch_size)
+           for sid in ids}
+
+    fwalls, swalls, max_param_diff = [], [], 0.0
+    for w in range(n_windows):
+        datas = [streams[sid].supervised(w) for sid in ids]
+        wkeys = [keys[sid][w] for sid in ids]
+        t0 = time.perf_counter()
+        fleet_params, _ = ff.train_fleet(datas, wkeys)
+        fwalls.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        seq_params = [seq[sid].train(d, None, k)[0]
+                      for sid, d, k in zip(ids, datas, wkeys)]
+        swalls.append(time.perf_counter() - t0)
+        for fp, sp in zip(fleet_params, seq_params):
+            for a, b in zip(jax.tree_util.tree_leaves(fp),
+                            jax.tree_util.tree_leaves(sp)):
+                max_param_diff = max(max_param_diff, float(np.max(np.abs(
+                    np.asarray(a) - np.asarray(b)))))
+
+    fleet = _summary(fwalls)
+    fleet["dispatches"] = ff.train_dispatches
+    fleet["dispatches_per_window"] = ff.train_dispatches / n_windows
+    fleet["trace_counts"] = {str(k): v for k, v in ff.trace_counts().items()}
+    fleet["retraces_after_first_window"] = ff.retrace_count - len(
+        ff.trace_counts())
+    fleet["streams_per_sec_steady"] = (
+        len(ids) / max(fleet["steady_state_wall_s"], 1e-12))
+    sequential = _summary(swalls)
+    sequential["dispatches"] = n_windows * len(ids)
+    sequential["streams_per_sec_steady"] = (
+        len(ids) / max(sequential["steady_state_wall_s"], 1e-12))
+    return {
+        "fleet": fleet,
+        "sequential": sequential,
+        "speedup_fleet_vs_sequential": (
+            sequential["steady_state_median_s"]
+            / max(fleet["steady_state_median_s"], 1e-12)),
+        "max_param_abs_diff": max_param_diff,
+        "n_windows": n_windows,
+        "n_streams": len(ids),
+    }
+
+
+def _bench_executor_parity(cfg, streams, bp, epochs: int, batch_size: int,
+                           key) -> Dict:
+    """Full fleet run vs N sequential single-stream runs: per-window RMSE
+    divergence across every stream and record."""
+    import jax
+
+    from repro.core import (
+        FleetStages,
+        PipelineStages,
+        lstm_fleet_forecaster,
+        lstm_forecaster,
+    )
+    from repro.runtime import InProcessExecutor, InProcessFleetExecutor
+
+    ids = list(streams)
+    ff = lstm_fleet_forecaster(cfg, epochs=epochs, batch_size=batch_size)
+    fleet_res = InProcessFleetExecutor(
+        FleetStages.build(ff, mode="dynamic")).run(
+            streams, bp, key)
+
+    max_diff = 0.0
+    for i, sid in enumerate(ids):
+        fc = lstm_forecaster(cfg, epochs=epochs, batch_size=batch_size)
+        seq = InProcessExecutor(PipelineStages.build(fc, mode="dynamic")).run(
+            streams[sid], bp, jax.random.fold_in(key, i))
+        for a, b in zip(seq.records, fleet_res.results[sid].records):
+            max_diff = max(
+                max_diff,
+                abs(a.rmse_batch - b.rmse_batch),
+                abs(a.rmse_speed - b.rmse_speed),
+                abs(a.rmse_hybrid - b.rmse_hybrid))
+    return {
+        "rmse_max_abs_diff": max_diff,
+        "train_dispatches": fleet_res.train_dispatches,
+        "n_windows": fleet_res.n_windows,
+        "dispatches_per_window": (fleet_res.train_dispatches
+                                  / fleet_res.n_windows),
+        "fleet_mean_rmse": fleet_res.mean_rmse(),
+    }
+
+
+def _bench_drift_gated(cfg, bp, n_streams: int, n_windows: int,
+                       records_per_window: int, epochs: int, batch_size: int,
+                       key) -> Dict:
+    """Drift-gated vs every-window retraining on the stationary and abrupt
+    scenarios."""
+    from repro.core import FleetStages, lstm_fleet_forecaster
+    from repro.core.drift import DriftGate
+    from repro.runtime import InProcessFleetExecutor
+
+    out = {}
+    for scenario in ("none", "abrupt"):
+        streams, _ = _fleet_streams(n_streams, n_windows, records_per_window,
+                                    scenario)
+        runs = {}
+        for label, gate in (("every_window", None), ("gated", DriftGate())):
+            ff = lstm_fleet_forecaster(cfg, epochs=epochs,
+                                       batch_size=batch_size)
+            ex = InProcessFleetExecutor(FleetStages.build(ff, mode="dynamic"),
+                                        gate=gate)
+            res = ex.run(streams, bp, key)
+            runs[label] = res
+        every, gated = runs["every_window"], runs["gated"]
+        out[scenario] = {
+            "skipped_retrains": gated.skipped_retrains(),
+            "total_retrains": gated.total_retrains(),
+            "every_window_retrains": every.total_retrains(),
+            "train_dispatches_gated": gated.train_dispatches,
+            "train_dispatches_every_window": every.train_dispatches,
+            "hybrid_rmse_gated": gated.mean_rmse()["hybrid"],
+            "hybrid_rmse_every_window": every.mean_rmse()["hybrid"],
+            "speed_rmse_gated": gated.mean_rmse()["speed"],
+            "speed_rmse_every_window": every.mean_rmse()["speed"],
+            "gate_stats": gated.gate_stats,
+        }
+        out[scenario]["hybrid_rmse_ratio"] = (
+            out[scenario]["hybrid_rmse_gated"]
+            / max(out[scenario]["hybrid_rmse_every_window"], 1e-12))
+    return out
+
+
+def run(n_streams: int = 8, n_windows: int = 8,
+        records_per_window: int = 250, epochs: int = 10,
+        batch_size: int = 64) -> Dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import lstm_forecaster, pretrain_batch_model
+
+    cfg = get_config("lstm-paper")
+    key = jax.random.PRNGKey(1)
+    streams, hist0 = _fleet_streams(n_streams, n_windows, records_per_window,
+                                    "gradual")
+    fc_batch = lstm_forecaster(cfg, epochs=max(epochs // 2, 2),
+                               batch_size=256)
+    bp, _ = pretrain_batch_model(fc_batch, hist0, jax.random.PRNGKey(0))
+
+    return {
+        "benchmark": "fleet_speed_layer",
+        "config": {
+            "model": "lstm-paper",
+            "n_streams": n_streams,
+            "n_windows": n_windows,
+            "records_per_window": records_per_window,
+            "epochs": epochs,
+            "batch_size": batch_size,
+        },
+        "fleet_training": _bench_fleet_training(cfg, streams, epochs,
+                                                batch_size, key),
+        "executor_parity": _bench_executor_parity(cfg, streams, bp, epochs,
+                                                  batch_size, key),
+        "drift_gated": _bench_drift_gated(cfg, bp, n_streams, n_windows,
+                                          records_per_window, epochs,
+                                          batch_size, key),
+    }
+
+
+def report(res: Dict) -> str:
+    tr, par, dg = (res["fleet_training"], res["executor_parity"],
+                   res["drift_gated"])
+    f, s = tr["fleet"], tr["sequential"]
+    lines = [
+        f"# fleet speed layer: {tr['n_streams']} streams, "
+        f"{tr['n_windows']} windows, per-window training wall (s)",
+        f"{'window':<8}{'fleet(1 dispatch)':>18}{'sequential(xN)':>16}",
+    ]
+    for w, (fw, sw) in enumerate(zip(f["per_window_wall_s"],
+                                     s["per_window_wall_s"])):
+        lines.append(f"{w:<8}{fw:>18.4f}{sw:>16.4f}")
+    lines += [
+        "",
+        f"steady state: fleet {f['steady_state_wall_s']:.4f}s "
+        f"({f['streams_per_sec_steady']:.1f} streams/s)  sequential "
+        f"{s['steady_state_wall_s']:.4f}s "
+        f"({s['streams_per_sec_steady']:.1f} streams/s)  "
+        f"speedup {tr['speedup_fleet_vs_sequential']:.2f}x",
+        f"fleet dispatches: {f['dispatches']} "
+        f"({f['dispatches_per_window']:.2f}/window; sequential pays "
+        f"{s['dispatches']})",
+        f"retraces after first window per bucket: "
+        f"{f['retraces_after_first_window']}  (buckets: {f['trace_counts']})",
+        f"fleet-vs-sequential max param diff: {tr['max_param_abs_diff']:.2e}",
+        "",
+        "# executor parity (fleet run vs N sequential single-stream runs)",
+        f"max per-window RMSE divergence: {par['rmse_max_abs_diff']:.2e}",
+        f"train dispatches: {par['train_dispatches']} "
+        f"({par['dispatches_per_window']:.2f}/window)",
+        "",
+        "# drift-gated retraining vs every-window",
+    ]
+    for scenario, d in dg.items():
+        lines.append(
+            f"{scenario:<10} retrains {d['total_retrains']}"
+            f"/{d['every_window_retrains']} (skipped "
+            f"{d['skipped_retrains']}), dispatches "
+            f"{d['train_dispatches_gated']}"
+            f"/{d['train_dispatches_every_window']}, hybrid RMSE "
+            f"{d['hybrid_rmse_gated']:.4f} vs "
+            f"{d['hybrid_rmse_every_window']:.4f} "
+            f"(ratio {d['hybrid_rmse_ratio']:.3f})")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized run: 4 streams, 4 windows, 3 epochs, "
+                        "120 records")
+    p.add_argument("--streams", type=int, default=None)
+    p.add_argument("--windows", type=int, default=None)
+    p.add_argument("--epochs", type=int, default=None)
+    p.add_argument("--records", type=int, default=None)
+    p.add_argument("--out", default="BENCH_fleet.json")
+    args = p.parse_args()
+
+    if args.smoke:
+        defaults = dict(n_streams=4, n_windows=4, epochs=3,
+                        records_per_window=120)
+    else:
+        defaults = dict(n_streams=8, n_windows=8, epochs=10,
+                        records_per_window=250)
+    if args.streams is not None:
+        defaults["n_streams"] = args.streams
+    if args.windows is not None:
+        defaults["n_windows"] = args.windows
+    if args.epochs is not None:
+        defaults["epochs"] = args.epochs
+    if args.records is not None:
+        defaults["records_per_window"] = args.records
+
+    res = run(**defaults)
+    print(report(res))
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

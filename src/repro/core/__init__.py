@@ -5,10 +5,19 @@ from repro.core.hybrid import (  # noqa: F401
     HybridRunResult,
     HybridStreamAnalytics,
     WindowRecord,
+    lstm_fleet_forecaster,
     lstm_forecaster,
     pretrain_batch_model,
 )
-from repro.core.stages import PipelineStages, split_chain  # noqa: F401
+from repro.core.stages import (  # noqa: F401
+    FleetStages,
+    FleetState,
+    PipelineStages,
+    StreamId,
+    StreamState,
+    resolve_fleet_params,
+    split_chain,
+)
 from repro.core.weighting import (  # noqa: F401
     combine,
     dwa_closed_form,

@@ -20,12 +20,23 @@ An executor (``repro.runtime.executor``) decides *where and when* each stage
 runs: ``InProcessExecutor`` replays the paper's synchronous per-window loop;
 ``BusExecutor`` schedules the stages as ``TopicBus`` subscribers according to
 a ``Deployment`` placement map.
+
+The stream dimension: every stage's state contract is *per stream*.  A
+single-stream pipeline threads one stream's state through the stages
+directly (the original API, unchanged); a fleet lifts the same stage
+objects over a ``StreamId``-keyed axis — ``FleetState`` holds each stream's
+serving-side state, ``FleetStage`` maps a single-stream stage over a
+``{stream_id: kwargs}`` dict, and ``FleetSpeedTraining`` replaces the
+per-stream training loop with one vmapped whole-fleet dispatch
+(``repro.training.compiled.FleetForecaster``).  The fleet executors
+(``InProcessFleetExecutor`` / ``FleetBusExecutor``) drive ``FleetStages``;
+the single-stream executors keep driving ``PipelineStages``.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -239,6 +250,154 @@ class PipelineStages:
     @property
     def mode(self):
         return self.weight_solve.mode
+
+
+# ---------------------------------------------------------------------------
+# The fleet dimension: StreamId-keyed state + fleet-lifted stages
+# ---------------------------------------------------------------------------
+
+StreamId = str
+
+
+@dataclass
+class StreamState:
+    """One stream's serving-side state: the installed speed model plus the
+    Algorithm-1 inputs its last retrain produced.  This is the per-stream
+    unit every stage's state contract is expressed in — the pre-fleet
+    executors carried exactly one of these."""
+
+    speed_params: Optional[Params] = None
+    prev_preds: Optional[Tuple[np.ndarray, np.ndarray]] = None
+    prev_y: Optional[np.ndarray] = None
+    window: int = -1
+
+
+@dataclass
+class FleetState:
+    """``StreamId``-keyed serving state for a fleet of streams."""
+
+    streams: Dict[StreamId, StreamState] = field(default_factory=dict)
+
+    def state(self, sid: StreamId) -> StreamState:
+        """The stream's state, created empty on first touch."""
+        st = self.streams.get(sid)
+        if st is None:
+            st = self.streams[sid] = StreamState()
+        return st
+
+    def ids(self) -> List[StreamId]:
+        return list(self.streams)
+
+    def __len__(self) -> int:
+        return len(self.streams)
+
+
+def resolve_fleet_params(batch_params: Any, ids: List[StreamId]
+                         ) -> Dict[StreamId, Params]:
+    """Normalize a batch-model argument to per-stream form: a mapping whose
+    keys cover every stream id is already per-stream; anything else (a
+    params tree — itself a dict, but keyed by layer names, not stream ids)
+    is one model shared by the whole fleet.  A mapping that names *some*
+    stream ids but not all is almost certainly an incomplete per-stream
+    mapping — reject it loudly rather than hand every stream the whole
+    stream-keyed dict as its params tree."""
+    if isinstance(batch_params, Mapping):
+        hits = set(ids) & set(batch_params)
+        if set(ids) <= set(batch_params):
+            return {sid: batch_params[sid] for sid in ids}
+        if hits:
+            raise ValueError(
+                "per-stream batch params mapping is missing streams "
+                f"{sorted(set(ids) - set(batch_params))}")
+    return {sid: batch_params for sid in ids}
+
+
+class FleetStage(Stage):
+    """Lift a single-stream stage to a fleet: ``compute`` maps the wrapped
+    stage over a ``{stream_id: kwargs}`` dict and returns per-stream
+    ``StageOutput``s (each individually wall-clocked by the wrapped stage's
+    own ``__call__``).  The wrapped stage object is untouched and still
+    directly callable, so the single-stream API is preserved verbatim."""
+
+    def __init__(self, stage: Stage):
+        self.stage = stage
+        self.name = stage.name
+
+    def compute(self, *, fleet: Dict[StreamId, Dict[str, Any]]
+                ) -> Dict[str, Any]:
+        return {"fleet": {sid: self.stage(**kw) for sid, kw in fleet.items()}}
+
+
+class FleetSpeedTraining(Stage):
+    """Whole-fleet speed training in one vmapped device dispatch
+    (``FleetForecaster.train_fleet``), plus the per-stream Algorithm-1 eval
+    predictions the single-stream ``SpeedTraining`` stashes.  Drift gating
+    happens *above* this stage: the caller passes only the streams whose
+    gate said retrain, and the stream-count buckets absorb the varying
+    subset sizes."""
+
+    name = "speed_training"
+
+    def __init__(self, fleet_forecaster):
+        self.forecaster = fleet_forecaster
+
+    def compute(self, *, fleet_data: Dict[StreamId, Dict[str, np.ndarray]],
+                batch_params: Any, keys: Dict[StreamId, Any]
+                ) -> Dict[str, Any]:
+        fc = self.forecaster
+        sids = list(fleet_data)
+        bp = resolve_fleet_params(batch_params, sids)
+        params_list, train_wall_s = fc.train_fleet(
+            [fleet_data[s] for s in sids], [keys[s] for s in sids])
+        fleet = {}
+        for sid, params in zip(sids, params_list):
+            x, y = fleet_data[sid]["x"], fleet_data[sid]["y"]
+            eval_preds = eval_y = None
+            if len(x) > 0:
+                eval_preds = (fc.predict(params, x),
+                              fc.predict(bp[sid], x))
+                eval_y = y
+            fleet[sid] = {"params": params, "eval_preds": eval_preds,
+                          "eval_y": eval_y}
+        return {"fleet": fleet, "train_wall_s": train_wall_s}
+
+
+@dataclass
+class FleetStages:
+    """The fleet-level stage set: the *same* single-stream stage objects
+    (``single`` is a fully functional ``PipelineStages``) lifted per-stream
+    by ``FleetStage``, plus the one-dispatch whole-fleet speed training."""
+
+    single: PipelineStages
+    batch_inference: FleetStage
+    speed_inference: FleetStage
+    weight_solve: FleetStage
+    hybrid_combine: FleetStage
+    speed_training: FleetSpeedTraining
+    model_sync: FleetStage
+    data_sync: FleetStage
+
+    @classmethod
+    def build(cls, fleet_forecaster, mode="dynamic",
+              dwa_solver: str = "closed_form") -> "FleetStages":
+        """``fleet_forecaster`` is a ``FleetForecaster`` (it satisfies the
+        single-stream ``Forecaster`` protocol by delegation, so the wrapped
+        ``PipelineStages`` serve per-stream inference unchanged)."""
+        single = PipelineStages.build(fleet_forecaster, mode, dwa_solver)
+        return cls(
+            single=single,
+            batch_inference=FleetStage(single.batch_inference),
+            speed_inference=FleetStage(single.speed_inference),
+            weight_solve=FleetStage(single.weight_solve),
+            hybrid_combine=FleetStage(single.hybrid_combine),
+            speed_training=FleetSpeedTraining(fleet_forecaster),
+            model_sync=FleetStage(single.model_sync),
+            data_sync=FleetStage(single.data_sync),
+        )
+
+    @property
+    def mode(self):
+        return self.single.mode
 
 
 def split_chain(key, n: int):

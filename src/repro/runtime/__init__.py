@@ -18,7 +18,12 @@ from repro.runtime.deployment import (  # noqa: F401
 from repro.runtime.executor import (  # noqa: F401
     BusExecutor,
     BusRunResult,
+    FleetBusExecutor,
+    FleetBusRunResult,
+    FleetRunResult,
     InProcessExecutor,
+    InProcessFleetExecutor,
+    fleet_key_chains,
 )
 from repro.runtime.latency import CostModel, LatencyLedger  # noqa: F401
 from repro.runtime.modules import EdgeCloudSimulation, SimulationResult  # noqa: F401

@@ -117,7 +117,14 @@ class EventKernel:
 
 
 class TopicBus:
-    """MQTT-like pub/sub across sites with link-cost delivery."""
+    """MQTT-like pub/sub across sites with link-cost delivery.
+
+    Topics are ``/``-separated names.  A subscription may end in the MQTT
+    single-level wildcard ``+``: ``"stream/window/+"`` receives every
+    publish one level below ``stream/window`` — how a fleet executor
+    subscribes one handler to all of its per-stream topics
+    (``stream/window/t00``, ``stream/window/t01``, ...) under one
+    ``Deployment``."""
 
     def __init__(self, kernel: EventKernel, topo: Topology):
         self.kernel = kernel
@@ -128,9 +135,16 @@ class TopicBus:
     def subscribe(self, topic: str, site: str, fn: Callable[[Message], None]):
         self._subs.setdefault(topic, []).append((site, fn))
 
+    def _matches(self, topic: str) -> List[Tuple[str, Callable[[Message], None]]]:
+        subs = list(self._subs.get(topic, []))
+        head, _, leaf = topic.rpartition("/")
+        if head and leaf != "+":
+            subs += self._subs.get(head + "/+", [])
+        return subs
+
     def publish(self, topic: str, payload: Any, nbytes: float, src: str) -> None:
         msg_t = self.kernel.now
-        for site, fn in self._subs.get(topic, []):
+        for site, fn in self._matches(topic):
             link = self.topo.link(src, site)
             dt = link.transfer_time(nbytes)
             msg = Message(topic=topic, payload=payload, nbytes=nbytes, src=src,

@@ -30,16 +30,33 @@ placing speed training on a site whose ``memory_bytes`` cannot hold
 thrash time of the attempt (``CostModel.oom_thrash_s``), and never publishes
 a model — so the edge-centric speed layer degrades to serving the batch
 model, exactly the paper's Sec. 6.2 outcome.
+
+The fleet executors lift both modalities to N streams under one deployment:
+``InProcessFleetExecutor`` is the synchronous loop over a ``FleetStages``
+set (per-stream inference through the same stage objects, whole-fleet speed
+training in one vmapped dispatch per window), and ``FleetBusExecutor``
+multiplexes the bus topics per stream (``stream/window/t03``, one wildcard
+subscription per module) while aggregating every stream's window into that
+single training dispatch.  Both consult an optional ``DriftGate`` so
+stationary streams skip their retrain and keep serving the prior model.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
+from repro.core.drift import DriftGate
 from repro.core.hybrid import HybridRunResult, WindowRecord
-from repro.core.stages import PipelineStages, split_chain
+from repro.core.stages import (
+    FleetStages,
+    FleetState,
+    PipelineStages,
+    StreamId,
+    resolve_fleet_params,
+    split_chain,
+)
 from repro.core.weighting import rmse
 from repro.core.windows import WindowedStream
 from repro.runtime.bus import (
@@ -57,6 +74,7 @@ from repro.runtime.modules import (
     T_MODEL,
     T_SPEED,
     T_STREAM,
+    stream_topic,
 )
 
 Params = Any
@@ -67,6 +85,37 @@ def _nbytes(tree: Any) -> float:
     import jax
 
     return float(sum(np.asarray(x).nbytes for x in jax.tree_util.tree_leaves(tree)))
+
+
+def _gate_decision(gate: Optional[DriftGate], sid: StreamId, y: np.ndarray,
+                   must: bool) -> bool:
+    """One stream's retrain decision.  A stream with no serving model must
+    retrain regardless of drift; the gate is told (``force_retrain``) so its
+    reference window keeps tracking what the model actually trained on and
+    its stats stay consistent with the executor's retrain log."""
+    if gate is None:
+        return True
+    if must:
+        gate.force_retrain(sid, y)
+        return True
+    return gate.decide(sid, y)
+
+
+def fleet_key_chains(key: Any, ids: List[StreamId], n: int
+                     ) -> Dict[StreamId, List[Any]]:
+    """Per-stream training-key chains.  A mapping gives each stream's root
+    key explicitly; a single key derives stream ``i``'s root as
+    ``fold_in(key, i)`` in fleet order.  Each root then runs the same
+    ``split_chain`` the single-stream executors use, so stream ``i`` of a
+    fleet run trains with byte-identical keys to a single-stream run seeded
+    with that root."""
+    import jax
+
+    if isinstance(key, Mapping):
+        roots = {sid: key[sid] for sid in ids}
+    else:
+        roots = {sid: jax.random.fold_in(key, i) for i, sid in enumerate(ids)}
+    return {sid: split_chain(roots[sid], n) for sid in ids}
 
 
 # ---------------------------------------------------------------------------
@@ -171,7 +220,86 @@ class _ModelState:
     window: int = -1
 
 
-class BusExecutor:
+class _BusRuntime:
+    """Shared machinery of the bus-driven executors: the event kernel +
+    topic bus + latency ledger lifecycle, the site scheduler that rescales
+    measured walls to a site's hardware class and queues work behind
+    earlier work on the site's worker pool, the training capacity model,
+    and the stage-agnostic handlers.  Subclasses provide ``dep``, ``topo``,
+    ``cost``, ``strict`` and ``_single_stages``."""
+
+    dep: Deployment
+    topo: Topology
+    cost: CostModel
+    strict: bool
+
+    def _init_runtime(self) -> None:
+        self.kernel = EventKernel()
+        self.bus = TopicBus(self.kernel, self.topo)
+        self.ledger = LatencyLedger()
+        self.failures: List[str] = []
+        self._free: Dict[str, List[float]] = {}
+
+    @property
+    def _single_stages(self) -> PipelineStages:
+        raise NotImplementedError
+
+    def _site(self, module: str):
+        return self.topo.sites[self.dep.site_of(module)]
+
+    def _train_fits_site(self, comm_s: float) -> bool:
+        """The capacity model: True when the training site can hold the
+        job.  Otherwise record the paper's OOM failure, charge the modeled
+        thrash of the attempt (``CostModel.oom_thrash_s`` — the successful
+        training wall is no proxy now that the compiled hot path runs in
+        milliseconds), and never let a model publish."""
+        site = self._site("speed_training")
+        if self.cost.train_memory_bytes <= site.memory_bytes:
+            return True
+        self.failures.append(
+            f"speed_training OOM on {site.name}: needs "
+            f"{self.cost.train_memory_bytes/1e9:.1f} GB > "
+            f"{site.memory_bytes/1e9:.1f} GB")
+        if self.strict:
+            raise CapacityError(self.failures[-1])
+        self._schedule("speed_training", self.cost.oom_thrash_s, comm_s)
+        return False
+
+    def _on_data_sync(self, msg: Message) -> None:
+        out = self._single_stages.data_sync(nbytes=msg.nbytes)
+        link = self.topo.link(self.dep.site_of("data_sync"),
+                              self.dep.site_of("archiving"))
+        self._schedule("data_sync", out.wall_s,
+                       link.transfer_time(out["nbytes"]))
+
+    def _on_archive(self, msg: Message) -> None:
+        self.ledger.add("archiving", comp_s=0.0,
+                        comm_s=msg.deliver_time - msg.publish_time)
+
+    def _schedule(self, module: str, wall_s: float, comm_s: float,
+                  done: Optional[Callable[[], None]] = None) -> None:
+        """Account a stage that took ``wall_s`` real seconds: rescale to the
+        site's hardware class, queue it behind earlier work on the site's
+        worker pool, and fire ``done`` at its virtual completion."""
+        site = self._site(module)
+        scaled = wall_s / max(site.compute_scale, 1e-9)
+        pool = self._free.setdefault(
+            site.name, [self.kernel.now] * max(site.workers, 1))
+        i = min(range(len(pool)), key=pool.__getitem__)
+        start = max(self.kernel.now, pool[i])
+        queue_s = start - self.kernel.now
+        pool[i] = start + scaled
+
+        def finish():
+            self.ledger.add(module, comp_s=scaled, comm_s=comm_s,
+                            queue_s=queue_s)
+            if done is not None:
+                done()
+
+        self.kernel.at(start + scaled, finish)
+
+
+class BusExecutor(_BusRuntime):
     """Drive the stages as topic-bus subscribers under a placement map.
 
     The ``CostModel`` is consulted only for what cannot be measured from this
@@ -211,20 +339,20 @@ class BusExecutor:
         self.quantized_sync = quantized_sync
         self.quant_min_size = quant_min_size
 
+    @property
+    def _single_stages(self) -> PipelineStages:
+        return self.stages
+
     # -- per-run state -------------------------------------------------------
 
     def _reset(self) -> None:
-        self.kernel = EventKernel()
-        self.bus = TopicBus(self.kernel, self.topo)
-        self.ledger = LatencyLedger()
-        self.failures: List[str] = []
+        self._init_runtime()
         self._model = _ModelState()
         self._records: Dict[int, WindowRecord] = {}
         self._train_walls: Dict[int, float] = {}
         self._pending: Dict[int, Dict[str, Message]] = {}
         self._inject_t: Dict[int, float] = {}
         self.e2e_s: Dict[int, float] = {}
-        self._free: Dict[str, List[float]] = {}
         self._wire()
 
     def _wire(self) -> None:
@@ -238,33 +366,6 @@ class BusExecutor:
         bus.subscribe(T_HYBRID, dep.site_of("archiving"), self._on_archive)
         bus.subscribe(T_HYBRID, dep.site_of("data_injection"), self._on_user)
         bus.subscribe(T_MODEL, dep.site_of("model_sync"), self._on_model_sync)
-
-    # -- scheduling ----------------------------------------------------------
-
-    def _site(self, module: str):
-        return self.topo.sites[self.dep.site_of(module)]
-
-    def _schedule(self, module: str, wall_s: float, comm_s: float,
-                  done: Optional[Callable[[], None]] = None) -> None:
-        """Account a stage that took ``wall_s`` real seconds: rescale to the
-        site's hardware class, queue it behind earlier work on the site's
-        worker pool, and fire ``done`` at its virtual completion."""
-        site = self._site(module)
-        scaled = wall_s / max(site.compute_scale, 1e-9)
-        pool = self._free.setdefault(
-            site.name, [self.kernel.now] * max(site.workers, 1))
-        i = min(range(len(pool)), key=pool.__getitem__)
-        start = max(self.kernel.now, pool[i])
-        queue_s = start - self.kernel.now
-        pool[i] = start + scaled
-
-        def finish():
-            self.ledger.add(module, comp_s=scaled, comm_s=comm_s,
-                            queue_s=queue_s)
-            if done is not None:
-                done()
-
-        self.kernel.at(start + scaled, finish)
 
     # -- handlers ------------------------------------------------------------
 
@@ -341,19 +442,7 @@ class BusExecutor:
     def _on_train(self, msg: Message) -> None:
         w = msg.payload["window"]
         comm = msg.deliver_time - msg.publish_time
-        site = self._site("speed_training")
-        if self.cost.train_memory_bytes > site.memory_bytes:
-            self.failures.append(
-                f"speed_training OOM on {site.name}: needs "
-                f"{self.cost.train_memory_bytes/1e9:.1f} GB > "
-                f"{site.memory_bytes/1e9:.1f} GB")
-            if self.strict:
-                raise CapacityError(self.failures[-1])
-            # the attempt thrashes the site for the modeled swap-paging
-            # duration before the OOM kill (CostModel.oom_thrash_s — the
-            # successful training wall is no proxy now that the compiled hot
-            # path runs in milliseconds); no model is ever published
-            self._schedule("speed_training", self.cost.oom_thrash_s, comm)
+        if not self._train_fits_site(comm):
             return
         out = self.stages.speed_training(
             data={"x": msg.payload["x"], "y": msg.payload["y"]},
@@ -397,17 +486,6 @@ class BusExecutor:
             prev_y=out["prev_y"], window=msg.payload["window"])
         self._schedule("model_sync", out.wall_s,
                        msg.deliver_time - msg.publish_time)
-
-    def _on_data_sync(self, msg: Message) -> None:
-        out = self.stages.data_sync(nbytes=msg.nbytes)
-        link = self.topo.link(self.dep.site_of("data_sync"),
-                              self.dep.site_of("archiving"))
-        self._schedule("data_sync", out.wall_s,
-                       link.transfer_time(out["nbytes"]))
-
-    def _on_archive(self, msg: Message) -> None:
-        self.ledger.add("archiving", comp_s=0.0,
-                        comm_s=msg.deliver_time - msg.publish_time)
 
     def _on_user(self, msg: Message) -> None:
         w = msg.payload["window"]
@@ -465,4 +543,450 @@ class BusExecutor:
             e2e_s=dict(self.e2e_s),
             message_log=self.bus.log,
             mode=str(self.stages.mode),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Fleet executors: N streams, one deployment, one train dispatch per window
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FleetRunResult:
+    """What a fleet run produced: per-stream window records plus the
+    fleet-level training accounting (how many device dispatches the whole
+    fleet's speed training cost, and which windows each stream's drift gate
+    skipped)."""
+
+    results: Dict[StreamId, HybridRunResult]
+    train_dispatches: int
+    retrain_log: Dict[StreamId, List[bool]]
+    gate_stats: Optional[Dict[str, Any]]
+    n_windows: int
+    mode: str
+
+    def skipped_retrains(self) -> int:
+        return sum(not fired for log in self.retrain_log.values()
+                   for fired in log)
+
+    def total_retrains(self) -> int:
+        return sum(fired for log in self.retrain_log.values()
+                   for fired in log)
+
+    def mean_rmse(self) -> Dict[str, float]:
+        """Fleet mean of the per-stream mean RMSEs (nan when no stream has
+        inference records yet, e.g. a one-window run)."""
+        per = [r.mean_rmse() for r in self.results.values() if r.records]
+        if not per:
+            return {k: float("nan") for k in ("batch", "speed", "hybrid")}
+        return {k: float(np.mean([p[k] for p in per]))
+                for k in ("batch", "speed", "hybrid")}
+
+
+@dataclass
+class FleetBusRunResult(FleetRunResult):
+    """Fleet run under the topic bus: adds the measured latency ledger,
+    capacity failures, and per-stream end-to-end window latency."""
+
+    ledger: LatencyLedger = field(default_factory=LatencyLedger)
+    failures: List[str] = field(default_factory=list)
+    e2e_s: Dict[StreamId, Dict[int, float]] = field(default_factory=dict)
+    message_log: List[Message] = field(default_factory=list)
+
+    def table3(self) -> Dict[str, Dict[str, float]]:
+        return self.ledger.table()
+
+    def mean_e2e_s(self) -> float:
+        vals = [v for per in self.e2e_s.values() for v in per.values()]
+        return float(np.mean(vals)) if vals else float("nan")
+
+
+class InProcessFleetExecutor:
+    """The paper's synchronous per-window loop lifted to a fleet of streams.
+
+    Per window ``t``: per-stream inference through the fleet-lifted stages
+    (the same single-stream stage math and timing conventions as
+    ``InProcessExecutor`` — a one-stream fleet reproduces its records
+    exactly), then **one** whole-fleet speed-training dispatch
+    (``FleetSpeedTraining`` -> ``FleetForecaster.train_fleet``) covering the
+    streams whose drift gate said retrain — all of them when no gate is
+    given, the paper's every-window policy.  Skipped streams keep serving
+    their prior speed model and their prior Algorithm-1 eval predictions."""
+
+    def __init__(self, stages: FleetStages, *, start_window: int = 1,
+                 gate: Optional[DriftGate] = None):
+        self.stages = stages
+        self.start_window = start_window
+        self.gate = gate
+
+    def run(self, streams: Dict[StreamId, WindowedStream], batch_params: Any,
+            key, n_windows: Optional[int] = None) -> FleetRunResult:
+        st = self.stages
+        ids = list(streams)
+        n = min(len(s) for s in streams.values())
+        if n_windows is not None:
+            n = min(n, n_windows)
+        keys = fleet_key_chains(key, ids, n)
+        bp = resolve_fleet_params(batch_params, ids)
+        fleet = FleetState()
+        records: Dict[StreamId, List[WindowRecord]] = {sid: [] for sid in ids}
+        retrain_log: Dict[StreamId, List[bool]] = {sid: [] for sid in ids}
+        fc = st.speed_training.forecaster
+        dispatches0 = fc.train_dispatches
+
+        for t in range(n):
+            data = {sid: streams[sid].supervised(t) for sid in ids}
+            infer = [sid for sid in ids
+                     if t >= self.start_window
+                     and fleet.state(sid).speed_params is not None
+                     and len(data[sid]["x"]) > 0]
+            if infer:
+                b = st.batch_inference(fleet={
+                    sid: dict(batch_params=bp[sid], x=data[sid]["x"])
+                    for sid in infer})["fleet"]
+                s = st.speed_inference(fleet={
+                    sid: dict(speed_params=fleet.state(sid).speed_params,
+                              x=data[sid]["x"])
+                    for sid in infer})["fleet"]
+                w = st.weight_solve(fleet={
+                    sid: dict(prev_preds=fleet.state(sid).prev_preds,
+                              prev_y=fleet.state(sid).prev_y)
+                    for sid in infer})["fleet"]
+                h = st.hybrid_combine(fleet={
+                    sid: dict(pred_speed=s[sid]["pred"],
+                              pred_batch=b[sid]["pred"],
+                              w_speed=w[sid]["w_speed"],
+                              w_batch=w[sid]["w_batch"])
+                    for sid in infer})["fleet"]
+                for sid in infer:
+                    y = data[sid]["y"]
+                    t_w = (w[sid].wall_s
+                           if st.single.weight_solve.is_dynamic
+                           and fleet.state(sid).prev_preds is not None
+                           else 0.0)
+                    records[sid].append(WindowRecord(
+                        window=t,
+                        rmse_batch=rmse(y, b[sid]["pred"]),
+                        rmse_speed=rmse(y, s[sid]["pred"]),
+                        rmse_hybrid=rmse(y, h[sid]["pred"]),
+                        w_speed=w[sid]["w_speed"],
+                        w_batch=w[sid]["w_batch"],
+                        t_batch_infer=b[sid].wall_s,
+                        t_speed_infer=s[sid].wall_s,
+                        t_hybrid_infer=h[sid].wall_s + t_w,
+                        t_weight_solve=t_w,
+                    ))
+            # training phase: drift-gated whole-fleet dispatch
+            train_ids = []
+            for sid in ids:
+                fire = _gate_decision(
+                    self.gate, sid, data[sid]["y"],
+                    must=fleet.state(sid).speed_params is None)
+                retrain_log[sid].append(fire)
+                if fire:
+                    train_ids.append(sid)
+            if train_ids:
+                tr = st.speed_training(
+                    fleet_data={sid: data[sid] for sid in train_ids},
+                    batch_params={sid: bp[sid] for sid in train_ids},
+                    keys={sid: keys[sid][t] for sid in train_ids})
+                for sid in train_ids:
+                    out = tr["fleet"][sid]
+                    ss = fleet.state(sid)
+                    ss.speed_params = out["params"]
+                    ss.window = t
+                    if out["eval_preds"] is not None:
+                        ss.prev_preds = out["eval_preds"]
+                        ss.prev_y = out["eval_y"]
+                    if records[sid] and records[sid][-1].window == t:
+                        records[sid][-1].t_speed_train = tr["train_wall_s"]
+
+        return FleetRunResult(
+            results={sid: HybridRunResult(records=records[sid],
+                                          mode=str(st.mode))
+                     for sid in ids},
+            train_dispatches=fc.train_dispatches - dispatches0,
+            retrain_log=retrain_log,
+            gate_stats=self.gate.stats() if self.gate is not None else None,
+            n_windows=n,
+            mode=str(st.mode),
+        )
+
+
+class FleetBusExecutor(_BusRuntime):
+    """``BusExecutor`` lifted to a fleet: N streams multiplexed over
+    per-stream topics (``stream/window/<sid>`` etc., one wildcard
+    subscription per module) under **one** ``Deployment``, per-stream
+    serving state in a ``FleetState``, and every stream's window-``t``
+    payload aggregated into one whole-fleet speed-training dispatch.
+
+    Fresh models publish per stream on ``model/latest/<sid>`` carrying that
+    stream's real parameter byte count, so the sync-transfer accounting
+    scales with how many streams actually retrained — with a ``DriftGate``,
+    stationary streams neither train nor transfer, while their inference
+    chain keeps serving the prior model (the per-stream dynamic-learning
+    policy the paper applies globally)."""
+
+    def __init__(
+        self,
+        stages: FleetStages,
+        deployment: Deployment,
+        topo: Topology,
+        cost: Optional[CostModel] = None,
+        *,
+        start_window: int = 1,
+        window_period_s: float = 30.0,
+        strict_capacity: bool = False,
+        gate: Optional[DriftGate] = None,
+    ):
+        self.stages = stages
+        self.dep = deployment
+        self.topo = topo
+        self.cost = cost or CostModel()
+        self.start_window = start_window
+        self.period = window_period_s
+        self.strict = strict_capacity
+        self.gate = gate
+
+    @property
+    def _single_stages(self) -> PipelineStages:
+        return self.stages.single
+
+    # -- per-run state -------------------------------------------------------
+
+    def _reset(self, ids: List[StreamId]) -> None:
+        self._init_runtime()
+        self.ids = list(ids)
+        self._fleet = FleetState()
+        self._records: Dict[Tuple[StreamId, int], WindowRecord] = {}
+        self._train_walls: Dict[Tuple[StreamId, int], float] = {}
+        self._pending: Dict[Tuple[StreamId, int], Dict[str, Message]] = {}
+        self._pending_train: Dict[int, Dict[StreamId, Message]] = {}
+        self._retrain_log: Dict[StreamId, List[bool]] = {
+            sid: [] for sid in ids}
+        self._inject_t: Dict[Tuple[StreamId, int], float] = {}
+        self.e2e_s: Dict[StreamId, Dict[int, float]] = {sid: {} for sid in ids}
+        self._ys: Dict[Tuple[StreamId, int], np.ndarray] = {}
+        self._wire()
+
+    def _wire(self) -> None:
+        dep, bus = self.dep, self.bus
+        sub = lambda base, module, fn: bus.subscribe(
+            base + "/+", dep.site_of(module), fn)
+        sub(T_STREAM, "batch_inference", self._on_batch)
+        sub(T_STREAM, "speed_inference", self._on_speed)
+        sub(T_STREAM, "speed_training", self._on_train)
+        sub(T_STREAM, "data_sync", self._on_data_sync)
+        sub(T_BATCH, "hybrid_inference", self._on_part)
+        sub(T_SPEED, "hybrid_inference", self._on_part)
+        sub(T_HYBRID, "archiving", self._on_archive)
+        sub(T_HYBRID, "data_injection", self._on_user)
+        sub(T_MODEL, "model_sync", self._on_model_sync)
+
+    # -- handlers ------------------------------------------------------------
+
+    def _on_batch(self, msg: Message) -> None:
+        sid, w = msg.payload["stream"], msg.payload["window"]
+        if w < self.start_window:
+            return
+        comm = msg.deliver_time - msg.publish_time + self.cost.ingest_s
+        out = self.stages.single.batch_inference(
+            batch_params=self._bp[sid], x=msg.payload["x"])
+        self._schedule(
+            "batch_inference", out.wall_s, comm,
+            lambda: self.bus.publish(
+                stream_topic(T_BATCH, sid),
+                {"stream": sid, "window": w, "kind": "batch",
+                 "pred": out["pred"], "wall_s": out.wall_s,
+                 "fallback": False},
+                _nbytes(out["pred"]), self.dep.site_of("batch_inference")))
+
+    def _on_speed(self, msg: Message) -> None:
+        sid, w = msg.payload["stream"], msg.payload["window"]
+        if w < self.start_window:
+            return
+        comm = msg.deliver_time - msg.publish_time + self.cost.ingest_s
+        out = self.stages.single.speed_inference(
+            speed_params=self._fleet.state(sid).speed_params,
+            x=msg.payload["x"], fallback_params=self._bp[sid])
+        self._schedule(
+            "speed_inference", out.wall_s, comm,
+            lambda: self.bus.publish(
+                stream_topic(T_SPEED, sid),
+                {"stream": sid, "window": w, "kind": "speed",
+                 "pred": out["pred"], "wall_s": out.wall_s,
+                 "fallback": out["fallback"]},
+                _nbytes(out["pred"]), self.dep.site_of("speed_inference")))
+
+    def _on_part(self, msg: Message) -> None:
+        sid, w = msg.payload["stream"], msg.payload["window"]
+        parts = self._pending.setdefault((sid, w), {})
+        parts[msg.payload["kind"]] = msg
+        if len(parts) < 2:
+            return
+        st = self.stages.single
+        state = self._fleet.state(sid)
+        bmsg, smsg = parts["batch"], parts["speed"]
+        comm = max(m.deliver_time - m.publish_time for m in parts.values())
+        wsol = st.weight_solve(prev_preds=state.prev_preds,
+                               prev_y=state.prev_y)
+        t_w = (wsol.wall_s if st.weight_solve.is_dynamic
+               and state.prev_preds is not None else 0.0)
+        hc = st.hybrid_combine(
+            pred_speed=smsg.payload["pred"], pred_batch=bmsg.payload["pred"],
+            w_speed=wsol["w_speed"], w_batch=wsol["w_batch"])
+        y = self._ys[(sid, w)]
+        rec = WindowRecord(
+            window=w,
+            rmse_batch=rmse(y, bmsg.payload["pred"]),
+            rmse_speed=rmse(y, smsg.payload["pred"]),
+            rmse_hybrid=rmse(y, hc["pred"]),
+            w_speed=wsol["w_speed"],
+            w_batch=wsol["w_batch"],
+            t_speed_train=self._train_walls.get((sid, w), 0.0),
+            t_batch_infer=bmsg.payload["wall_s"],
+            t_speed_infer=smsg.payload["wall_s"],
+            t_hybrid_infer=hc.wall_s + t_w,
+            t_weight_solve=t_w,
+        )
+        self._records[(sid, w)] = rec
+        self._schedule(
+            "hybrid_inference", wsol.wall_s + hc.wall_s, comm,
+            lambda: self.bus.publish(
+                stream_topic(T_HYBRID, sid),
+                {"stream": sid, "window": w, "rmse_hybrid": rec.rmse_hybrid,
+                 "w_speed": rec.w_speed},
+                _nbytes(hc["pred"]), self.dep.site_of("hybrid_inference")))
+
+    def _on_train(self, msg: Message) -> None:
+        sid, w = msg.payload["stream"], msg.payload["window"]
+        pend = self._pending_train.setdefault(w, {})
+        pend[sid] = msg
+        if len(pend) < len(self.ids):
+            return
+        # the whole fleet's window w has arrived at the training site: one
+        # drift-gated, stream-count-bucketed fleet dispatch
+        comm = max(m.deliver_time - m.publish_time for m in pend.values())
+        if not self._train_fits_site(comm):
+            return
+        train_ids = []
+        for s in self.ids:
+            fire = _gate_decision(
+                self.gate, s, pend[s].payload["y"],
+                must=self._fleet.state(s).speed_params is None)
+            self._retrain_log[s].append(fire)
+            if fire:
+                train_ids.append(s)
+        if not train_ids:
+            return
+        out = self.stages.speed_training(
+            fleet_data={s: {"x": pend[s].payload["x"],
+                            "y": pend[s].payload["y"]} for s in train_ids},
+            batch_params={s: self._bp[s] for s in train_ids},
+            keys={s: self._keys[s][w] for s in train_ids})
+        for s in train_ids:
+            # the shared fleet dispatch's wall, charged only to the streams
+            # that actually trained — a gate-skipped stream's window record
+            # keeps t_speed_train = 0
+            self._train_walls[(s, w)] = out["train_wall_s"]
+            if (s, w) in self._records:
+                self._records[(s, w)].t_speed_train = out["train_wall_s"]
+
+        def publish_models():
+            for s in train_ids:
+                o = out["fleet"][s]
+                self.bus.publish(
+                    stream_topic(T_MODEL, s),
+                    {"stream": s, "window": w, "params": o["params"],
+                     "eval_preds": o["eval_preds"], "eval_y": o["eval_y"]},
+                    _nbytes(o["params"]), self.dep.site_of("speed_training"))
+
+        self._schedule("speed_training", out.wall_s, comm, publish_models)
+
+    def _on_model_sync(self, msg: Message) -> None:
+        sid = msg.payload["stream"]
+        state = self._fleet.state(sid)
+        if msg.payload["window"] <= state.window:
+            # never install an older model over a newer one (out-of-order
+            # publishes on a multi-worker training site)
+            self.ledger.add("model_sync", comp_s=0.0,
+                            comm_s=msg.deliver_time - msg.publish_time)
+            return
+        out = self.stages.single.model_sync(
+            params=msg.payload["params"],
+            eval_preds=msg.payload["eval_preds"],
+            eval_y=msg.payload["eval_y"])
+        state.speed_params = out["speed_params"]
+        state.prev_preds = out["prev_preds"]
+        state.prev_y = out["prev_y"]
+        state.window = msg.payload["window"]
+        self._schedule("model_sync", out.wall_s,
+                       msg.deliver_time - msg.publish_time)
+
+    def _on_user(self, msg: Message) -> None:
+        sid, w = msg.payload["stream"], msg.payload["window"]
+        if (sid, w) in self._inject_t:
+            self.e2e_s[sid][w] = msg.deliver_time - self._inject_t[(sid, w)]
+
+    # -- driver --------------------------------------------------------------
+
+    def _warmup(self, streams: Dict[StreamId, WindowedStream]) -> None:
+        """Compile every jit path once (the full-fleet train bucket and the
+        inference shapes), so measured windows are steady-state windows.
+        Runs outside the event loop; the drift gate never sees it, and the
+        dispatch counter is snapshotted after it."""
+        data = {sid: streams[sid].supervised(0) for sid in self.ids}
+        tr = self.stages.speed_training(
+            fleet_data=data, batch_params=self._bp,
+            keys={sid: self._keys[sid][0] for sid in self.ids})
+        sid0 = self.ids[0]
+        if len(data[sid0]["x"]) > 0:
+            self.stages.single.batch_inference(
+                batch_params=self._bp[sid0], x=data[sid0]["x"])
+            self.stages.single.speed_inference(
+                speed_params=tr["fleet"][sid0]["params"], x=data[sid0]["x"])
+
+    def run(self, streams: Dict[StreamId, WindowedStream], batch_params: Any,
+            key, n_windows: Optional[int] = None) -> FleetBusRunResult:
+        from repro.streams.injection import BusInjector
+
+        ids = list(streams)
+        self._reset(ids)
+        n = min(len(s) for s in streams.values())
+        if n_windows is not None:
+            n = min(n, n_windows)
+        self._bp = resolve_fleet_params(batch_params, ids)
+        self._keys = fleet_key_chains(key, ids, n)
+        self._warmup(streams)
+        fc = self.stages.speed_training.forecaster
+        dispatches0 = fc.train_dispatches
+
+        for sid in ids:
+            injector = BusInjector(self.kernel, self.bus, T_STREAM,
+                                   self.dep.site_of("data_injection"),
+                                   period_s=self.period, stream_id=sid)
+            for w in range(n):
+                data = streams[sid].supervised(w)
+                self._ys[(sid, w)] = data["y"]
+                self._inject_t[(sid, w)] = injector.schedule_window(w, data)
+        self.kernel.run()
+
+        results = {}
+        for sid in ids:
+            recs = [self._records[(s, w)]
+                    for (s, w) in sorted(self._records) if s == sid]
+            results[sid] = HybridRunResult(records=recs,
+                                           mode=str(self.stages.mode))
+        return FleetBusRunResult(
+            results=results,
+            train_dispatches=fc.train_dispatches - dispatches0,
+            retrain_log={sid: list(log)
+                         for sid, log in self._retrain_log.items()},
+            gate_stats=self.gate.stats() if self.gate is not None else None,
+            n_windows=n,
+            mode=str(self.stages.mode),
+            ledger=self.ledger,
+            failures=self.failures,
+            e2e_s={sid: dict(per) for sid, per in self.e2e_s.items()},
+            message_log=self.bus.log,
         )

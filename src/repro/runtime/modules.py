@@ -34,6 +34,14 @@ T_MODEL = "model/latest"
 T_ARCHIVE = "archive/put"
 
 
+def stream_topic(base: str, stream_id: str) -> str:
+    """Per-stream multiplexing of a base topic: ``stream/window`` ->
+    ``stream/window/t03``.  Fleet executors subscribe ``base + "/+"`` (the
+    bus's single-level wildcard) to receive every stream of a fleet with
+    one handler."""
+    return f"{base}/{stream_id}"
+
+
 @dataclass
 class SimulationResult:
     ledger: LatencyLedger

@@ -59,21 +59,29 @@ class BusInjector:
     module of the bus-scheduled pipeline): window ``w`` is published on
     ``topic`` at virtual time ``w * period_s`` from ``site``, carrying the
     window's real supervised arrays; ``nbytes`` is the actual payload size so
-    link transfer times reflect the data that moves."""
+    link transfer times reflect the data that moves.
+
+    With a ``stream_id``, the injector is one member of a fleet: it
+    publishes on the per-stream topic ``topic/<stream_id>`` (the fleet
+    executors subscribe the ``topic/+`` wildcard) and stamps the stream id
+    into every payload."""
 
     def __init__(self, kernel, bus, topic: str, site: str,
-                 period_s: float = 30.0):
+                 period_s: float = 30.0, stream_id: Optional[str] = None):
         self.kernel = kernel
         self.bus = bus
-        self.topic = topic
+        self.topic = topic if stream_id is None else f"{topic}/{stream_id}"
         self.site = site
         self.period_s = period_s
+        self.stream_id = stream_id
         self.injected = 0
 
     def schedule_window(self, w: int, data: dict) -> float:
         """Schedule window ``w``'s publish; returns its injection time."""
         t = w * self.period_s
         payload = {"window": w, "x": data["x"], "y": data["y"]}
+        if self.stream_id is not None:
+            payload["stream"] = self.stream_id
         nbytes = float(data["x"].nbytes + data["y"].nbytes)
         self.kernel.at(
             t, lambda: self.bus.publish(self.topic, payload, nbytes, self.site))

@@ -2,7 +2,9 @@ from repro.training.optimizer import Optimizer, OptState, adamw, sgd, warmup_cos
 from repro.training.train_loop import fit, make_eval_step, make_train_step  # noqa: F401
 from repro.training.compiled import (  # noqa: F401
     CompiledForecaster,
+    FleetForecaster,
     bucket_examples,
+    bucket_streams,
     pad_to_bucket,
 )
 from repro.training import checkpoint  # noqa: F401

@@ -27,12 +27,20 @@ stay dispatch-light forever after:
   Python body only runs when XLA traces it), so benchmarks and regression
   tests can assert that windows 2..N of a shape bucket perform zero new
   traces.
+
+``FleetForecaster`` lifts the same hot path to a *fleet* of streams: the
+whole fleet's speed models train in **one** device dispatch per window — a
+vmapped cold-start fit over a stacked leading stream axis, cached per
+(stream-count bucket, shape bucket).  Stream-count padding works exactly
+like batch padding: padded stream slots carry an all-zero validity mask, so
+they contribute zero loss and zero gradient and their (discarded) params
+never move.
 """
 from __future__ import annotations
 
 import math
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -77,6 +85,44 @@ def pad_to_bucket(data: Dict[str, np.ndarray], nb: int) -> Dict[str, np.ndarray]
 
 def _next_pow2(n: int) -> int:
     return 1 << max(0, math.ceil(math.log2(max(n, 1))))
+
+
+def bucket_streams(s: int) -> int:
+    """Stream-count bucket for an ``s``-stream fleet training batch: the next
+    power of two.  Like shape buckets, stream-count buckets grow
+    geometrically, so a fleet of any size — or any drift-gated *subset* of
+    it — touches only O(log S) compiled fleet executables."""
+    if s <= 0:
+        raise ValueError(f"cannot bucket an empty fleet (s={s})")
+    return _next_pow2(s)
+
+
+def _make_epoch_scan(model: Model, opt: Optimizer, epochs: int,
+                     batch_size: int, nb: int):
+    """The pure epoch-scan fit body shared by the single-stream and fleet
+    trainers: the whole fit (per-epoch permutations, minibatch gather,
+    ``epochs x steps`` optimizer updates) is one ``lax.scan`` over a
+    device-resident pre-permuted epoch index tensor."""
+    steps = nb // batch_size
+    train_step = make_train_step(model, opt)
+
+    def epoch_scan_fit(params, opt_state, x, y, mask, rng):
+        perms = jax.vmap(lambda k: jax.random.permutation(k, nb))(
+            jax.random.split(rng, epochs))
+        idx = perms.reshape(epochs * steps, batch_size)
+
+        def body(carry, ib):
+            params, opt_state = carry
+            batch = {"x": x[ib], "y": y[ib], "mask": mask[ib]}
+            params, opt_state, metrics = train_step(params, opt_state,
+                                                    batch)
+            return (params, opt_state), metrics["loss"]
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), idx)
+        return params, opt_state, losses
+
+    return epoch_scan_fit
 
 
 class CompiledForecaster:
@@ -145,29 +191,15 @@ class CompiledForecaster:
         fn = self._fit_cache.get(nb)
         if fn is not None:
             return fn
-        epochs, bs = self.epochs, self.batch_size
-        steps = nb // bs
-        train_step = make_train_step(self.model, self.opt)
+        scan_fit = _make_epoch_scan(self.model, self.opt, self.epochs,
+                                    self.batch_size, nb)
         counts = self._trace_counts
         counts.setdefault(nb, 0)
 
         def epoch_scan_fit(params, opt_state, x, y, mask, rng):
             # executes only while XLA traces — counts real retraces
             counts[nb] += 1
-            perms = jax.vmap(lambda k: jax.random.permutation(k, nb))(
-                jax.random.split(rng, epochs))
-            idx = perms.reshape(epochs * steps, bs)
-
-            def body(carry, ib):
-                params, opt_state = carry
-                batch = {"x": x[ib], "y": y[ib], "mask": mask[ib]}
-                params, opt_state, metrics = train_step(params, opt_state,
-                                                        batch)
-                return (params, opt_state), metrics["loss"]
-
-            (params, opt_state), losses = jax.lax.scan(
-                body, (params, opt_state), idx)
-            return params, opt_state, losses
+            return scan_fit(params, opt_state, x, y, mask, rng)
 
         fn = jax.jit(epoch_scan_fit, donate_argnums=(0, 1))
         self._fit_cache[nb] = fn
@@ -240,3 +272,201 @@ class CompiledForecaster:
             x = np.concatenate(
                 [x, np.zeros((nb - n,) + x.shape[1:], x.dtype)], axis=0)
         return np.asarray(self._predict_fn(params, jnp.asarray(x)))[:n]
+
+
+class FleetForecaster:
+    """Fleet-axis trainer: one speed model per stream, the whole fleet fit
+    in **one device dispatch** per window.
+
+    Wraps a single-stream :class:`CompiledForecaster` (exposed as
+    ``.single``, and via delegating ``train``/``predict`` so a
+    ``FleetForecaster`` satisfies the ``Forecaster`` protocol anywhere a
+    single-stream trainer is expected).  ``train_fleet`` stacks the fleet's
+    padded windows along a new leading stream axis and runs a vmapped
+    cold-start fit — per-stream param init, optimizer init, and the shared
+    epoch-scan body — inside a single jitted executable, cached per
+    (stream-count bucket, shape bucket):
+
+    * the per-stream key derivation (``init_key, perm_key = split(key)``)
+      is byte-identical to the single-stream path, so stream ``i`` of a
+      fleet fit trains from the same init, with the same minibatch
+      permutations, as a sequential ``CompiledForecaster.train`` given the
+      same key — fleet-vs-sequential parity is a numerical (vmap batching)
+      tolerance, not a semantic difference;
+    * the stream axis is padded up to ``bucket_streams(s)`` with zero-data,
+      all-zero-mask slots, exactly like batch padding: a padded slot's loss
+      and gradient are exactly zero, so its (discarded) params never move
+      and the optimizer's global-norm clip is unaffected;
+    * streams whose windows fall in different *shape* buckets are grouped,
+      one dispatch per group — a homogeneous fleet (the paper's fixed-size
+      windows) always trains in exactly one;
+    * a single-stream group (s == 1) delegates to the wrapped
+      ``CompiledForecaster``, keeping the single-stream path byte-identical
+      to the pre-fleet code.
+
+    ``train_dispatches`` counts fit-executable invocations (what
+    ``benchmarks/bench_fleet.py`` asserts is one per window for a
+    homogeneous fleet); ``trace_counts`` exposes per-bucket XLA traces so
+    the zero-retrace-after-first-window property stays testable.
+    """
+
+    def __init__(
+        self,
+        model: Model,
+        *,
+        epochs: int,
+        batch_size: int,
+        lr: float = 1e-3,
+        opt: Optional[Optimizer] = None,
+        predict_fn: Optional[Callable[[Params, jax.Array], jax.Array]] = None,
+    ):
+        self.single = CompiledForecaster(
+            model, epochs=epochs, batch_size=batch_size, lr=lr, opt=opt,
+            predict_fn=predict_fn)
+        self.model = model
+        self.epochs = int(epochs)
+        self.batch_size = int(batch_size)
+        self.opt = self.single.opt
+        self._fleet_cache: Dict[Tuple[int, int], Callable] = {}
+        self._trace_counts: Dict[Tuple[int, int], int] = {}
+        self.train_dispatches = 0
+        # per-stream minibatch-loss trajectories of the last train_fleet call
+        self.last_losses: Optional[List[Optional[np.ndarray]]] = None
+
+    # -- Forecaster protocol (the fleet's single-stream view) ----------------
+
+    def train(self, data: Dict[str, np.ndarray], params: Optional[Params],
+              key: jax.Array) -> Tuple[Params, float]:
+        return self.single.train(data, params, key)
+
+    def predict(self, params: Params, x: np.ndarray) -> np.ndarray:
+        return self.single.predict(params, x)
+
+    # -- compile-cache introspection ----------------------------------------
+
+    @property
+    def retrace_count(self) -> int:
+        """Fleet-executable XLA traces across all (stream, shape) buckets
+        (the delegated single-stream path counts its own)."""
+        return sum(self._trace_counts.values())
+
+    @property
+    def cache_size(self) -> int:
+        return len(self._fleet_cache)
+
+    def trace_counts(self) -> Dict[Tuple[int, int], int]:
+        """Per-(stream-count bucket, shape bucket) XLA trace counts."""
+        return dict(self._trace_counts)
+
+    # -- the cached fleet-fit executable ------------------------------------
+
+    def _fleet_fit_fn(self, sb: int, nb: int) -> Callable:
+        cache_key = (sb, nb)
+        fn = self._fleet_cache.get(cache_key)
+        if fn is not None:
+            return fn
+        scan_fit = _make_epoch_scan(self.model, self.opt, self.epochs,
+                                    self.batch_size, nb)
+        init = self.model.init
+        opt_init = self.opt.init
+        counts = self._trace_counts
+        counts.setdefault(cache_key, 0)
+
+        def cold_fit(init_key, perm_key, x, y, mask):
+            params = init(init_key)
+            opt_state = opt_init(params)
+            params, _, losses = scan_fit(params, opt_state, x, y, mask,
+                                         perm_key)
+            return params, losses
+
+        def fleet_fit(init_keys, perm_keys, x, y, mask):
+            # executes only while XLA traces — counts real retraces
+            counts[cache_key] += 1
+            return jax.vmap(cold_fit)(init_keys, perm_keys, x, y, mask)
+
+        fn = jax.jit(fleet_fit)
+        self._fleet_cache[cache_key] = fn
+        return fn
+
+    # -- the fleet fit -------------------------------------------------------
+
+    def train_fleet(self, datas: Sequence[Dict[str, np.ndarray]],
+                    keys: Sequence[jax.Array]
+                    ) -> Tuple[List[Params], float]:
+        """Cold-start fit of one speed model per stream; returns the
+        per-stream params (same order as ``datas``) and the total wall.
+
+        ``keys[i]`` plays exactly the role ``key`` plays in
+        ``CompiledForecaster.train`` for stream ``i``."""
+        t0 = time.perf_counter()
+        if len(datas) != len(keys):
+            raise ValueError(f"{len(datas)} windows but {len(keys)} keys")
+        out: List[Optional[Params]] = [None] * len(datas)
+        if not datas:
+            return [], 0.0
+        groups: Dict[int, List[int]] = {}
+        for i, d in enumerate(datas):
+            n = len(next(iter(d.values())))
+            groups.setdefault(bucket_examples(n, self.batch_size), []).append(i)
+        losses: List[Optional[np.ndarray]] = [None] * len(datas)
+        for nb, idxs in sorted(groups.items()):
+            if len(idxs) == 1:
+                # byte-identical single-stream path (no vmap, no S padding)
+                i = idxs[0]
+                out[i], _ = self.single.train(datas[i], None, keys[i])
+                losses[i] = self.single.last_losses
+                self.train_dispatches += 1
+                continue
+            for i, l in zip(idxs, self._fit_group(nb, idxs, datas, keys, out)):
+                losses[i] = l
+        self.last_losses = losses
+        return out, time.perf_counter() - t0
+
+    def _fit_group(self, nb: int, idxs: List[int],
+                   datas: Sequence[Dict[str, np.ndarray]],
+                   keys: Sequence[jax.Array],
+                   out: List[Optional[Params]]) -> np.ndarray:
+        s = len(idxs)
+        sb = bucket_streams(s)
+        split = [jax.random.split(keys[i]) for i in idxs]
+        init_keys = [k[0] for k in split]
+        perm_keys = [k[1] for k in split]
+        padded = [pad_to_bucket(datas[i], nb) for i in idxs]
+        self._check_mask_honored(datas[idxs[0]], padded[0], nb, init_keys[0])
+        xs = [p["x"] for p in padded]
+        ys = [p["y"] for p in padded]
+        masks = [p["mask"] for p in padded]
+        for j in range(sb - s):
+            # stream-axis padding: zero data + all-zero validity mask, so the
+            # slot's loss/grad are exactly zero (any key gives a fine inert
+            # init; fold_in keeps it deterministic)
+            xs.append(np.zeros_like(xs[0]))
+            ys.append(np.zeros_like(ys[0]))
+            masks.append(np.zeros_like(masks[0]))
+            pad_key = jax.random.fold_in(keys[idxs[0]], 1 + j)
+            ik, pk = jax.random.split(pad_key)
+            init_keys.append(ik)
+            perm_keys.append(pk)
+        params_S, losses_S = self._fleet_fit_fn(sb, nb)(
+            jnp.stack(init_keys), jnp.stack(perm_keys),
+            jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)),
+            jnp.asarray(np.stack(masks)))
+        jax.block_until_ready(params_S)
+        self.train_dispatches += 1
+        for j, i in enumerate(idxs):
+            out[i] = jax.tree_util.tree_map(lambda a, j=j: a[j], params_S)
+        return np.asarray(losses_S)[:s]
+
+    def _check_mask_honored(self, data: Dict[str, np.ndarray],
+                            padded: Dict[str, np.ndarray], nb: int,
+                            init_key: jax.Array) -> None:
+        """One-time (per shape bucket) mask guard, same contract as the
+        single-stream trainer's; shares its dedup set so a bucket checked by
+        either path is checked once.  A window that exactly fills its
+        bucket needs no padding and no check (and must not pay the
+        throwaway init every window)."""
+        n = len(next(iter(data.values())))
+        if n == nb or nb in self.single._mask_checked:
+            return
+        params = self.single._init_fn(init_key)
+        self.single._check_mask_honored(data, padded, params, nb)

@@ -1,0 +1,173 @@
+"""Concept-drift layer tests: the ADF stationarity test (including p-value
+interpolation at and beyond the MacKinnon table ends), the online detectors
+(Page-Hinkley, two-window mean shift), and the drift-gated retraining policy
+built on them."""
+import numpy as np
+import pytest
+
+from repro.core.drift import (
+    _P_TABLE,
+    _TAU_TABLE,
+    DriftGate,
+    PageHinkleyDetector,
+    adf_test,
+    mackinnon_pvalue,
+    window_mean_shift,
+)
+from repro.streams.sources import apply_scenario, wind_turbine_series
+
+
+# ---------------------------------------------------------------------------
+# ADF stationarity test
+# ---------------------------------------------------------------------------
+
+
+def test_adf_stationary_vs_random_walk():
+    rng = np.random.default_rng(0)
+    stationary = wind_turbine_series(4000, seed=0)[:, 0]
+    res = adf_test(stationary)
+    walk = np.cumsum(rng.normal(0, 1, 4000))
+    res_walk = adf_test(walk)
+    assert res.statistic < res_walk.statistic
+    assert res.stationary_5pct
+    assert not res_walk.stationary_5pct
+    assert res.pvalue < 0.05 < res_walk.pvalue
+
+
+def test_mackinnon_pvalue_interpolation_bounds():
+    """tau beyond either end of the MacKinnon table must clamp to the end
+    value (np.interp semantics), never extrapolate outside [0, 1]."""
+    lo_tau, hi_tau = _TAU_TABLE[0], _TAU_TABLE[-1]
+    lo_p, hi_p = _P_TABLE[0], _P_TABLE[-1]
+    # exactly at the table ends
+    assert mackinnon_pvalue(lo_tau) == pytest.approx(lo_p)
+    assert mackinnon_pvalue(hi_tau) == pytest.approx(hi_p)
+    # far beyond either end: clamped, not extrapolated
+    assert mackinnon_pvalue(-50.0) == pytest.approx(lo_p)
+    assert mackinnon_pvalue(50.0) == pytest.approx(hi_p)
+    for tau in (-1e6, -7.3, 2.2, 1e6):
+        assert 0.0 <= mackinnon_pvalue(tau) <= 1.0
+
+
+def test_mackinnon_pvalue_monotone():
+    taus = np.linspace(-8.0, 3.0, 200)
+    ps = [mackinnon_pvalue(t) for t in taus]
+    assert all(b >= a for a, b in zip(ps, ps[1:]))
+    # interior table points reproduce exactly
+    assert mackinnon_pvalue(-2.86) == pytest.approx(5e-2)
+    assert mackinnon_pvalue(-3.43) == pytest.approx(5e-3)
+
+
+def test_adf_extreme_series_pvalues_clamped():
+    """End-to-end: series whose tau lands beyond the table still produce
+    p-values inside the table range."""
+    # heavily mean-reverting AR(1): tau far more negative than -6
+    rng = np.random.default_rng(1)
+    y = np.zeros(3000)
+    eps = rng.normal(0, 1, 3000)
+    for i in range(1, 3000):
+        y[i] = -0.9 * y[i - 1] + eps[i]
+    res = adf_test(y)
+    assert res.statistic < _TAU_TABLE[0]
+    assert res.pvalue == pytest.approx(_P_TABLE[0])
+    assert res.stationary_5pct
+    # explosive trend: tau beyond the positive end
+    up = np.exp(np.linspace(0, 12, 600)) + rng.normal(0, 1e-6, 600)
+    res_up = adf_test(up)
+    assert res_up.pvalue <= _P_TABLE[-1]
+    assert not res_up.stationary_5pct
+
+
+# ---------------------------------------------------------------------------
+# online detectors
+# ---------------------------------------------------------------------------
+
+
+def test_page_hinkley_detects_shift():
+    det = PageHinkleyDetector(delta=0.01, threshold=1.5)
+    rng = np.random.default_rng(0)
+    fired_early = any(det.update(x) for x in rng.normal(0, 0.02, 300))
+    fired_late = any(det.update(x) for x in rng.normal(2.0, 0.02, 100))
+    assert not fired_early
+    assert fired_late
+
+
+def test_window_mean_shift():
+    rng = np.random.default_rng(0)
+    a = rng.normal(0, 1, 500)
+    b = rng.normal(0.05, 1, 500)
+    c = rng.normal(3, 1, 500)
+    assert not window_mean_shift(a, b)
+    assert window_mean_shift(a, c)
+    assert isinstance(window_mean_shift(a, c), bool)  # JSON-serializable
+
+
+# ---------------------------------------------------------------------------
+# drift-gated retraining policy
+# ---------------------------------------------------------------------------
+
+
+def _window_targets(scenario, n_windows=12, rpw=250, seed=0, drift_seed=1,
+                    alphas=None):
+    from repro.core.windows import WindowPlan, WindowedStream
+    from repro.streams.normalize import MinMaxScaler
+
+    series = wind_turbine_series(1600 + rpw * n_windows + 5, seed=seed)
+    hist, tail = series[:1600], series[1600:]
+    if alphas is None and scenario == "gradual":
+        alphas = np.full(5, 1.5e-3)
+    tail = apply_scenario(tail, scenario, seed=drift_seed, alphas=alphas)
+    scaler = MinMaxScaler.fit(hist)
+    stream = WindowedStream(scaler.transform(tail),
+                            WindowPlan(n_windows, rpw, lag=5))
+    return [stream.supervised(t)["y"] for t in range(n_windows)]
+
+
+def test_gate_always_retrains_warmup_then_skips_stationary():
+    gate = DriftGate()
+    ys = _window_targets("none")
+    decisions = [gate.decide("t00", y) for y in ys]
+    assert decisions[0] is True  # warmup
+    stats = gate.stats()
+    assert stats["skipped"] > 0
+    assert stats["retrained"] + stats["skipped"] == len(ys)
+    # a stationary stream skips most windows
+    assert stats["skipped"] > stats["retrained"]
+
+
+def test_gate_fires_on_drift_more_than_stationary():
+    counts = {}
+    for scenario, alphas in (("none", None),
+                             ("gradual", np.full(5, 5e-3))):
+        gate = DriftGate()
+        for y in _window_targets(scenario, n_windows=16, alphas=alphas):
+            gate.decide("s", y)
+        counts[scenario] = gate.stats()["retrained"]
+    assert counts["gradual"] > counts["none"]
+    assert counts["none"] < 16  # the stationary stream skips windows
+
+
+def test_gate_abrupt_jump_fires_immediately():
+    """A hard mean jump after warmup must fire on the window it appears."""
+    gate = DriftGate()
+    rng = np.random.default_rng(0)
+    base = [rng.normal(0.5, 0.01, 250) for _ in range(4)]
+    jumped = rng.normal(0.9, 0.01, 250)
+    decisions = [gate.decide("s", y) for y in base]
+    assert decisions[0] is True and not any(decisions[1:])
+    assert gate.decide("s", jumped) is True
+
+
+def test_gate_per_stream_state_independent():
+    gate = DriftGate()
+    rng = np.random.default_rng(0)
+    steady = [rng.normal(0.5, 0.01, 250) for _ in range(6)]
+    drifting = [rng.normal(0.5 + 0.1 * i, 0.01, 250) for i in range(6)]
+    for ys, sid in ((steady, "a"), (drifting, "b")):
+        for y in ys:
+            gate.decide(sid, y)
+    per = gate.stats()["per_stream"]
+    assert per["a"]["skipped"] == 5  # everything after warmup
+    assert per["b"]["retrained"] == 6  # fires every window
+    log = gate.retrain_log()
+    assert len(log["a"]) == len(log["b"]) == 6

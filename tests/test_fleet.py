@@ -1,0 +1,356 @@
+"""Fleet-layer tests: the vmapped whole-fleet fit must match N sequential
+single-stream fits (params + RMSE parity), a one-stream fleet must stay
+byte-identical to the single-stream executors, bus multiplexing must keep
+per-stream topics/state separate under one deployment with exactly one
+train dispatch per window, and drift-gated retraining must skip stationary
+streams while drifting streams keep retraining."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    FleetStages,
+    PipelineStages,
+    lstm_fleet_forecaster,
+    lstm_forecaster,
+    pretrain_batch_model,
+)
+from repro.core.drift import DriftGate
+from repro.runtime import (
+    CostModel,
+    FleetBusExecutor,
+    InProcessExecutor,
+    InProcessFleetExecutor,
+    edge_centric,
+    edge_cloud_integrated,
+    fleet_key_chains,
+    paper_topology,
+)
+from repro.runtime.modules import T_MODEL, T_STREAM
+from repro.streams.sources import fleet_windowed_streams
+from repro.training.compiled import (
+    CompiledForecaster,
+    FleetForecaster,
+    bucket_streams,
+)
+
+N_WINDOWS = 4
+RPW = 150
+N_STREAMS = 3
+EPOCHS = 6
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("lstm-paper")
+
+
+@pytest.fixture(scope="module")
+def fleet_setup(cfg):
+    """Three correlated turbines (stationary / gradual / abrupt), per-stream
+    scalers, one shared batch model."""
+    streams, hist0 = fleet_windowed_streams(
+        N_STREAMS, N_WINDOWS, RPW, ["none", "gradual", "abrupt"],
+        seed=0, hist_len=1200, alphas=np.full(5, 1.5e-3))
+    fc_batch = lstm_forecaster(cfg, epochs=4, batch_size=256)
+    bp, _ = pretrain_batch_model(fc_batch, hist0, jax.random.PRNGKey(0))
+    return streams, bp
+
+
+def _fleet_stages(cfg, mode="dynamic"):
+    ff = lstm_fleet_forecaster(cfg, epochs=EPOCHS, batch_size=64)
+    return FleetStages.build(ff, mode=mode), ff
+
+
+# ---------------------------------------------------------------------------
+# vmapped fleet fit vs sequential single-stream fits
+# ---------------------------------------------------------------------------
+
+
+def _window(n, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, 5, 5)).astype(np.float32)
+    y = x[:, :, 0].mean(axis=1, keepdims=True).astype(np.float32)
+    return {"x": x, "y": y}
+
+
+def test_fleet_fit_matches_sequential_params_and_rmse(cfg):
+    """One vmapped dispatch == N sequential CompiledForecaster fits, to
+    vmap-batching tolerance, for a non-power-of-two fleet (stream padding
+    in play)."""
+    from repro.models import get_model
+
+    model = get_model(cfg)
+    S = 5  # buckets to 8: three padded stream slots
+    datas = [_window(150, seed=i) for i in range(S)]
+    keys = [jax.random.fold_in(jax.random.PRNGKey(1), i) for i in range(S)]
+
+    ff = FleetForecaster(model, epochs=4, batch_size=64,
+                         predict_fn=None)
+    fleet_params, wall = ff.train_fleet(datas, keys)
+    assert wall > 0
+    assert ff.train_dispatches == 1
+    assert ff.trace_counts() == {(8, 256): 1}
+
+    for i in range(S):
+        fc = CompiledForecaster(model, epochs=4, batch_size=64)
+        seq_params, _ = fc.train(datas[i], None, keys[i])
+        for a, b in zip(jax.tree_util.tree_leaves(seq_params),
+                        jax.tree_util.tree_leaves(fleet_params[i])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-5, rtol=1e-4)
+        # RMSE parity on the window itself
+        loss_seq, _ = model.loss_fn(
+            seq_params, {k: jax.numpy.asarray(v) for k, v in datas[i].items()})
+        loss_fleet, _ = model.loss_fn(
+            fleet_params[i],
+            {k: jax.numpy.asarray(v) for k, v in datas[i].items()})
+        assert float(loss_fleet) == pytest.approx(float(loss_seq), rel=1e-3,
+                                                  abs=1e-6)
+
+    # second window, same shapes: zero new traces, one more dispatch
+    ff.train_fleet([_window(150, seed=100 + i) for i in range(S)], keys)
+    assert ff.train_dispatches == 2
+    assert ff.trace_counts() == {(8, 256): 1}
+
+
+def test_fleet_fit_single_stream_delegates_byte_identical(cfg):
+    """A one-stream fleet fit must go through the wrapped single-stream
+    trainer — bitwise-identical params, no vmapped executable."""
+    from repro.models import get_model
+
+    model = get_model(cfg)
+    data = _window(150)
+    key = jax.random.PRNGKey(3)
+    ff = FleetForecaster(model, epochs=3, batch_size=64)
+    (fleet_p,), _ = ff.train_fleet([data], [key])
+    fc = CompiledForecaster(model, epochs=3, batch_size=64)
+    seq_p, _ = fc.train(data, None, key)
+    for a, b in zip(jax.tree_util.tree_leaves(seq_p),
+                    jax.tree_util.tree_leaves(fleet_p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ff.trace_counts() == {}  # no fleet executable was ever built
+    assert ff.single.retrace_count == 1
+
+
+def test_resolve_fleet_params_shared_per_stream_and_partial():
+    from repro.core import resolve_fleet_params
+
+    ids = ["t00", "t01"]
+    shared = {"lstm": {"kernel": np.zeros(3)}}  # a params tree, not per-stream
+    out = resolve_fleet_params(shared, ids)
+    assert out["t00"] is shared and out["t01"] is shared
+    per = {"t00": {"a": 1}, "t01": {"a": 2}, "t02": {"a": 3}}
+    out = resolve_fleet_params(per, ids)
+    assert out == {"t00": {"a": 1}, "t01": {"a": 2}}
+    with pytest.raises(ValueError, match="missing streams.*t01"):
+        resolve_fleet_params({"t00": {"a": 1}}, ids)
+
+
+def test_bucket_streams():
+    assert bucket_streams(1) == 1
+    assert bucket_streams(2) == 2
+    assert bucket_streams(3) == 4
+    assert bucket_streams(8) == 8
+    assert bucket_streams(9) == 16
+    with pytest.raises(ValueError):
+        bucket_streams(0)
+
+
+# ---------------------------------------------------------------------------
+# fleet executors: parity with the single-stream loop
+# ---------------------------------------------------------------------------
+
+
+def test_inprocess_fleet_matches_sequential_runs(fleet_setup, cfg):
+    """Ungated fleet run == N sequential InProcessExecutor runs with the
+    same per-stream root keys, to vmap tolerance; one dispatch per window."""
+    streams, bp = fleet_setup
+    stages, ff = _fleet_stages(cfg)
+    key = jax.random.PRNGKey(1)
+    res = InProcessFleetExecutor(stages).run(streams, bp, key)
+    assert res.train_dispatches == N_WINDOWS
+    assert res.skipped_retrains() == 0
+
+    for i, sid in enumerate(streams):
+        fc = lstm_forecaster(cfg, epochs=EPOCHS, batch_size=64)
+        seq = InProcessExecutor(PipelineStages.build(fc, mode="dynamic")).run(
+            streams[sid], bp, jax.random.fold_in(key, i))
+        fleet_recs = res.results[sid].records
+        assert len(seq.records) == len(fleet_recs) == N_WINDOWS - 1
+        for a, b in zip(seq.records, fleet_recs):
+            assert a.window == b.window
+            assert a.rmse_batch == pytest.approx(b.rmse_batch, abs=1e-6)
+            assert a.rmse_speed == pytest.approx(b.rmse_speed, abs=1e-4)
+            assert a.rmse_hybrid == pytest.approx(b.rmse_hybrid, abs=1e-4)
+            assert a.w_speed == pytest.approx(b.w_speed, abs=1e-3)
+
+
+def test_single_stream_fleet_byte_identical_to_inprocess(fleet_setup, cfg):
+    """The fleet loop over ONE stream reproduces InProcessExecutor records
+    exactly: the single-stream path through the fleet layer is the
+    pre-fleet path."""
+    streams, bp = fleet_setup
+    sid = next(iter(streams))
+    root = jax.random.PRNGKey(7)
+    stages, _ = _fleet_stages(cfg)
+    res = InProcessFleetExecutor(stages).run({sid: streams[sid]}, bp,
+                                             {sid: root})
+    fc = lstm_forecaster(cfg, epochs=EPOCHS, batch_size=64)
+    seq = InProcessExecutor(PipelineStages.build(fc, mode="dynamic")).run(
+        streams[sid], bp, root)
+    assert len(seq.records) == len(res.results[sid].records)
+    for a, b in zip(seq.records, res.results[sid].records):
+        assert a.window == b.window
+        assert a.rmse_batch == b.rmse_batch
+        assert a.rmse_speed == b.rmse_speed
+        assert a.rmse_hybrid == b.rmse_hybrid
+        assert a.w_speed == b.w_speed and a.w_batch == b.w_batch
+
+
+def test_fleet_key_chains_match_single_stream_derivation():
+    key = jax.random.PRNGKey(5)
+    ids = ["t00", "t01"]
+    chains = fleet_key_chains(key, ids, 3)
+    from repro.core import split_chain
+
+    for i, sid in enumerate(ids):
+        expect = split_chain(jax.random.fold_in(key, i), 3)
+        for a, b in zip(expect, chains[sid]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # explicit per-stream roots pass through
+    roots = {sid: jax.random.fold_in(key, 100 + i)
+             for i, sid in enumerate(ids)}
+    chains2 = fleet_key_chains(roots, ids, 2)
+    for sid in ids:
+        expect = split_chain(roots[sid], 2)
+        for a, b in zip(expect, chains2[sid]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# fleet under the bus: multiplexed topics, one deployment
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_bus_matches_inprocess_fleet(fleet_setup, cfg):
+    """Same fleet + same keys under the topic bus (integrated deployment)
+    produce the in-process fleet's per-stream accuracy, and the fleet
+    trains in one dispatch per window."""
+    streams, bp = fleet_setup
+    key = jax.random.PRNGKey(1)
+    stages_a, _ = _fleet_stages(cfg)
+    sync = InProcessFleetExecutor(stages_a).run(streams, bp, key)
+    stages_b, _ = _fleet_stages(cfg)
+    ex = FleetBusExecutor(stages_b, edge_cloud_integrated(),
+                          paper_topology(), CostModel(ingest_s=0.5))
+    bus = ex.run(streams, bp, key)
+    assert bus.train_dispatches == N_WINDOWS
+    for sid in streams:
+        assert len(bus.results[sid].records) == N_WINDOWS - 1
+        for a, b in zip(sync.results[sid].records, bus.results[sid].records):
+            assert a.window == b.window
+            assert a.rmse_batch == pytest.approx(b.rmse_batch, abs=1e-12)
+            assert a.rmse_speed == pytest.approx(b.rmse_speed, abs=1e-12)
+            assert a.rmse_hybrid == pytest.approx(b.rmse_hybrid, abs=1e-12)
+        # per-stream e2e latency recorded for every inference window
+        assert set(bus.e2e_s[sid]) == set(range(1, N_WINDOWS))
+
+
+def test_fleet_bus_per_stream_topics_and_models(fleet_setup, cfg):
+    """Messages are multiplexed per stream (stream/window/<sid>), and each
+    stream's model publishes on its own model/latest/<sid> topic."""
+    streams, bp = fleet_setup
+    stages, _ = _fleet_stages(cfg)
+    ex = FleetBusExecutor(stages, edge_cloud_integrated(), paper_topology(),
+                          CostModel(ingest_s=0.5))
+    res = ex.run(streams, bp, jax.random.PRNGKey(1))
+    topics = {m.topic for m in res.message_log}
+    for sid in streams:
+        assert f"{T_STREAM}/{sid}" in topics
+        assert f"{T_MODEL}/{sid}" in topics
+    model_msgs = [m for m in res.message_log
+                  if m.topic.startswith(T_MODEL + "/")]
+    # every window publishes one model per stream (ungated)
+    assert len(model_msgs) == N_WINDOWS * len(streams)
+    for m in model_msgs:
+        assert m.topic == f"{T_MODEL}/{m.payload['stream']}"
+
+
+def test_fleet_bus_edge_centric_oom_degrades_all_streams(fleet_setup, cfg):
+    """Speed training placed on the Pi OOMs for the whole fleet: no model
+    is ever published, every stream serves the batch model."""
+    streams, bp = fleet_setup
+    stages, _ = _fleet_stages(cfg)
+    ex = FleetBusExecutor(stages, edge_centric(), paper_topology(),
+                          CostModel(ingest_s=0.5))
+    res = ex.run(streams, bp, jax.random.PRNGKey(1))
+    assert res.failures and "OOM" in res.failures[0]
+    assert res.train_dispatches == 0
+    for sid in streams:
+        for r in res.results[sid].records:
+            assert r.rmse_speed == pytest.approx(r.rmse_batch, abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# drift-gated retraining
+# ---------------------------------------------------------------------------
+
+
+def test_gated_bus_skips_stationary_streams(cfg):
+    """Under the bus, a gated fleet with one stationary and one drifting
+    stream skips retrains on the stationary stream while the drifting
+    stream keeps training — and skipped windows publish no model."""
+    n_windows, rpw = 6, 150
+    streams, hist0 = fleet_windowed_streams(
+        2, n_windows, rpw, ["none", "abrupt"], seed=3, hist_len=1200)
+    fc_batch = lstm_forecaster(cfg, epochs=4, batch_size=256)
+    bp, _ = pretrain_batch_model(fc_batch, hist0, jax.random.PRNGKey(0))
+
+    stages, _ = _fleet_stages(cfg)
+    ex = FleetBusExecutor(stages, edge_cloud_integrated(), paper_topology(),
+                          CostModel(ingest_s=0.5), gate=DriftGate())
+    res = ex.run(streams, bp, jax.random.PRNGKey(1))
+
+    assert res.skipped_retrains() > 0
+    stats = res.gate_stats["per_stream"]
+    assert stats["t00"]["skipped"] > 0  # the stationary stream skips
+    # every stream still serves every window
+    for sid in streams:
+        assert len(res.results[sid].records) == n_windows - 1
+    # models only transfer for retrained windows
+    model_msgs = [m for m in res.message_log
+                  if m.topic.startswith(T_MODEL + "/")]
+    assert len(model_msgs) == res.total_retrains()
+    assert res.train_dispatches <= n_windows
+    # the shared fleet dispatch's wall is charged only to streams that
+    # actually trained: a skipped window's record keeps t_speed_train = 0
+    for sid in streams:
+        for r in res.results[sid].records:
+            if not res.retrain_log[sid][r.window]:
+                assert r.t_speed_train == 0.0
+    # gate stats stay consistent with the executor's retrain log
+    stats = res.gate_stats
+    assert stats["retrained"] == res.total_retrains()
+    assert stats["skipped"] == res.skipped_retrains()
+
+
+def test_gated_inprocess_serves_prior_model_on_skip(fleet_setup, cfg):
+    """A skipped window's speed inference still runs — on the prior model
+    (not the batch fallback), so rmse_speed stays distinct from
+    rmse_batch."""
+    streams, bp = fleet_setup
+    stages, _ = _fleet_stages(cfg)
+    gate = DriftGate()
+    res = InProcessFleetExecutor(stages, gate=gate).run(
+        streams, bp, jax.random.PRNGKey(1))
+    assert res.gate_stats is not None
+    skipped_some = [sid for sid, log in res.retrain_log.items()
+                    if not all(log)]
+    assert skipped_some, "gate never skipped — thresholds off"
+    for sid in skipped_some:
+        for r in res.results[sid].records:
+            # a synced speed model exists from window 0 on; even when stale
+            # it is a different model from the batch one
+            assert r.rmse_speed != pytest.approx(r.rmse_batch, abs=1e-12)

@@ -1,13 +1,11 @@
-"""Serving engine + batching + drift detector tests."""
+"""Serving engine + batching tests (the drift-detector tests live in
+``tests/test_drift.py``)."""
 import jax
 import numpy as np
-import pytest
 
 from repro.configs import get_config
-from repro.core.drift import PageHinkleyDetector, adf_test, window_mean_shift
 from repro.models import get_model
 from repro.serving import BatchScheduler, Engine, Request
-from repro.streams.sources import wind_turbine_series
 
 
 def test_engine_generate_greedy_deterministic():
@@ -62,33 +60,3 @@ def test_engine_serve_continuous_batching():
     for r in done:
         assert len(r.generated) == r.max_new_tokens
         assert all(0 <= t < cfg.vocab_size for t in r.generated)
-
-
-def test_adf_stationary_vs_random_walk():
-    rng = np.random.default_rng(0)
-    stationary = wind_turbine_series(4000, seed=0)[:, 0]
-    res = adf_test(stationary)
-    walk = np.cumsum(rng.normal(0, 1, 4000))
-    res_walk = adf_test(walk)
-    assert res.statistic < res_walk.statistic
-    assert res.stationary_5pct
-    assert not res_walk.stationary_5pct
-    assert res.pvalue < 0.05 < res_walk.pvalue
-
-
-def test_page_hinkley_detects_shift():
-    det = PageHinkleyDetector(delta=0.01, threshold=1.5)
-    rng = np.random.default_rng(0)
-    fired_early = any(det.update(x) for x in rng.normal(0, 0.02, 300))
-    fired_late = any(det.update(x) for x in rng.normal(2.0, 0.02, 100))
-    assert not fired_early
-    assert fired_late
-
-
-def test_window_mean_shift():
-    rng = np.random.default_rng(0)
-    a = rng.normal(0, 1, 500)
-    b = rng.normal(0.05, 1, 500)
-    c = rng.normal(3, 1, 500)
-    assert not window_mean_shift(a, b)
-    assert window_mean_shift(a, c)
