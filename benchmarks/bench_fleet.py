@@ -3,18 +3,27 @@
 
 The single-stream hot path (``BENCH_hotpath.json``) made one window's
 retrain cheap; serving a *fleet* of sensors from one node multiplies every
-per-window cost by N unless the fleet trains together.  This benchmark pins
-the two fleet properties the executors rely on:
+per-window cost by N unless the fleet trains — and serves — together.
+This benchmark pins the fleet properties the executors rely on:
 
-* ``fleet_training`` — per-window wall of the one-dispatch vmapped fleet
-  fit (``FleetForecaster.train_fleet``) vs N sequential single-stream
-  ``CompiledForecaster`` fits over the same windows and keys, interleaved
-  window by window so host noise biases neither side.  Records per-window
-  walls, steady-state streams/sec for both paths, the dispatch counts (the
-  fleet path must be exactly one per window), the retrace counters (zero
-  new traces after each (stream-bucket, shape-bucket)'s first window), and
+* ``fleet_training`` — per-window wall of the one-dispatch fleet fit
+  (``FleetForecaster.train_fleet``: staged device buffers, donated
+  opt-state, stream axis sharded across the local device mesh) vs N
+  sequential single-stream ``CompiledForecaster`` fits over the same
+  windows and keys, interleaved window by window so host noise biases
+  neither side.  Both sides report wall/stream and dispatches/sec **from
+  the same per-window clock** (time until trained params are
+  device-resident and ready), the dispatch counts (the fleet path must be
+  exactly one per window), the retrace + staging-allocation counters (zero
+  new traces, zero host re-stacks after each bucket's first window), and
   the max parameter divergence of fleet-vs-sequential fits (vmap batching
   tolerance, not a semantic difference).
+
+* ``fleet_inference`` — the serving counterpart: one vmapped
+  ``predict_fleet`` dispatch per window vs N sequential per-stream
+  predicts, same clock; per-stream parity (<=1e-6), and the int8 fleet
+  sync numbers (per-stream sync bytes float-vs-int8, batched int8 predict
+  wall).
 
 * ``executor_parity`` — a full ``InProcessFleetExecutor`` run (ungated)
   against N sequential ``InProcessExecutor`` runs with the same per-stream
@@ -26,6 +35,11 @@ the two fleet properties the executors rely on:
   *skip* retrains (>0, counted), and the abrupt fleet's gated accuracy must
   track the every-window accuracy within tolerance.
 
+The process exposes the host's cores as XLA devices
+(``--xla_force_host_platform_device_count``) before touching jax, so the
+fleet paths shard their stream axis across the mesh — the configuration a
+fleet node actually runs, and the one the tracked numbers come from.
+
     PYTHONPATH=src python -m benchmarks.bench_fleet            # paper-ish
     PYTHONPATH=src python -m benchmarks.bench_fleet --smoke    # CI: seconds
 """
@@ -33,6 +47,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from typing import Dict, List
 
@@ -51,14 +66,22 @@ def _fleet_streams(n_streams: int, n_windows: int, records_per_window: int,
                                   scenario, seed=seed, alphas=alphas)
 
 
-def _summary(walls: List[float]) -> Dict:
+def _summary(walls: List[float], n_streams: int,
+             dispatches_per_window: float) -> Dict:
+    """Per-window wall statistics plus the two rates the fleet-vs-sequential
+    comparison is made in: wall/stream and dispatches/sec, both derived from
+    the same per-window clock (median steady-state wall)."""
     steady = walls[1:] if len(walls) > 1 else walls
     mean_steady = sum(steady) / len(steady)
+    median = sorted(steady)[len(steady) // 2]
     return {
         "per_window_wall_s": walls,
         "first_window_wall_s": walls[0],
         "steady_state_wall_s": mean_steady,
-        "steady_state_median_s": sorted(steady)[len(steady) // 2],
+        "steady_state_median_s": median,
+        "wall_per_stream_steady_s": median / n_streams,
+        "dispatches_per_sec_steady": dispatches_per_window / max(median,
+                                                                 1e-12),
     }
 
 
@@ -97,18 +120,15 @@ def _bench_fleet_training(cfg, streams, epochs: int, batch_size: int,
                 max_param_diff = max(max_param_diff, float(np.max(np.abs(
                     np.asarray(a) - np.asarray(b)))))
 
-    fleet = _summary(fwalls)
+    fleet = _summary(fwalls, len(ids), ff.train_dispatches / n_windows)
     fleet["dispatches"] = ff.train_dispatches
     fleet["dispatches_per_window"] = ff.train_dispatches / n_windows
     fleet["trace_counts"] = {str(k): v for k, v in ff.trace_counts().items()}
     fleet["retraces_after_first_window"] = ff.retrace_count - len(
         ff.trace_counts())
-    fleet["streams_per_sec_steady"] = (
-        len(ids) / max(fleet["steady_state_wall_s"], 1e-12))
-    sequential = _summary(swalls)
+    fleet["staging_allocs"] = ff.staging_allocs
+    sequential = _summary(swalls, len(ids), float(len(ids)))
     sequential["dispatches"] = n_windows * len(ids)
-    sequential["streams_per_sec_steady"] = (
-        len(ids) / max(sequential["steady_state_wall_s"], 1e-12))
     return {
         "fleet": fleet,
         "sequential": sequential,
@@ -118,6 +138,85 @@ def _bench_fleet_training(cfg, streams, epochs: int, batch_size: int,
         "max_param_abs_diff": max_param_diff,
         "n_windows": n_windows,
         "n_streams": len(ids),
+        "devices": _device_count(),
+    }
+
+
+def _device_count() -> int:
+    import jax
+
+    return jax.device_count()
+
+
+def _bench_fleet_inference(cfg, streams, epochs: int, batch_size: int,
+                           key) -> Dict:
+    """The serving hot path: one vmapped ``predict_fleet`` dispatch per
+    window vs N sequential per-stream predicts (same params, same windows,
+    same clock), plus the int8 fleet-sync numbers."""
+    import numpy as np
+
+    from repro.core import lstm_fleet_forecaster
+    from repro.runtime import fleet_key_chains
+    from repro.serving.quantize import quantize_tree, tree_nbytes
+    from repro.training.compiled import materialize_params
+
+    ids = list(streams)
+    n_windows = min(len(s) for s in streams.values())
+    keys = fleet_key_chains(key, ids, n_windows)
+    ff = lstm_fleet_forecaster(cfg, epochs=epochs, batch_size=batch_size)
+    params, _ = ff.train_fleet(
+        [streams[sid].supervised(0) for sid in ids],
+        [keys[sid][0] for sid in ids])
+
+    d0 = ff.predict_dispatches
+    fwalls, swalls, parity = [], [], 0.0
+    for w in range(n_windows):
+        xs = [streams[sid].supervised(w)["x"] for sid in ids]
+        t0 = time.perf_counter()
+        fleet_preds = ff.predict_fleet(params, xs)
+        fwalls.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        seq_preds = [ff.single.predict(p, x) for p, x in zip(params, xs)]
+        swalls.append(time.perf_counter() - t0)
+        for a, b in zip(fleet_preds, seq_preds):
+            parity = max(parity, float(np.max(np.abs(a - b))))
+    float_dispatches = ff.predict_dispatches - d0
+
+    qparams = [quantize_tree(p, min_size=64) for p in params]
+    qwalls = []
+    for w in range(n_windows):
+        xs = [streams[sid].supervised(w)["x"] for sid in ids]
+        t0 = time.perf_counter()
+        ff.predict_fleet(qparams, xs)
+        qwalls.append(time.perf_counter() - t0)
+
+    fleet = _summary(fwalls, len(ids), float_dispatches / n_windows)
+    fleet["dispatches"] = float_dispatches
+    fleet["dispatches_per_window"] = float_dispatches / n_windows
+    sequential = _summary(swalls, len(ids), float(len(ids)))
+    sequential["dispatches"] = n_windows * len(ids)
+    sequential["dispatches_per_window"] = float(len(ids))
+    float_bytes = tree_nbytes(materialize_params(params[0]))
+    int8_bytes = tree_nbytes(qparams[0])
+    return {
+        "fleet": fleet,
+        "sequential": sequential,
+        "speedup_fleet_vs_sequential": (
+            sequential["steady_state_median_s"]
+            / max(fleet["steady_state_median_s"], 1e-12)),
+        "per_stream_parity_max_abs_diff": parity,
+        "predict_trace_counts": {str(k): v
+                                 for k, v in ff.predict_trace_counts().items()},
+        "int8_sync": {
+            "steady_state_median_s": _summary(qwalls, len(ids), 1.0)[
+                "steady_state_median_s"],
+            "sync_bytes_float_per_stream": float_bytes,
+            "sync_bytes_int8_per_stream": int8_bytes,
+            "transfer_ratio": float_bytes / max(int8_bytes, 1),
+        },
+        "n_windows": n_windows,
+        "n_streams": len(ids),
+        "devices": _device_count(),
     }
 
 
@@ -230,6 +329,8 @@ def run(n_streams: int = 8, n_windows: int = 8,
         },
         "fleet_training": _bench_fleet_training(cfg, streams, epochs,
                                                 batch_size, key),
+        "fleet_inference": _bench_fleet_inference(cfg, streams, epochs,
+                                                  batch_size, key),
         "executor_parity": _bench_executor_parity(cfg, streams, bp, epochs,
                                                   batch_size, key),
         "drift_gated": _bench_drift_gated(cfg, bp, n_streams, n_windows,
@@ -239,12 +340,13 @@ def run(n_streams: int = 8, n_windows: int = 8,
 
 
 def report(res: Dict) -> str:
-    tr, par, dg = (res["fleet_training"], res["executor_parity"],
-                   res["drift_gated"])
+    tr, fi, par, dg = (res["fleet_training"], res["fleet_inference"],
+                       res["executor_parity"], res["drift_gated"])
     f, s = tr["fleet"], tr["sequential"]
     lines = [
         f"# fleet speed layer: {tr['n_streams']} streams, "
-        f"{tr['n_windows']} windows, per-window training wall (s)",
+        f"{tr['n_windows']} windows, {tr['devices']} device(s), "
+        f"per-window training wall (s)",
         f"{'window':<8}{'fleet(1 dispatch)':>18}{'sequential(xN)':>16}",
     ]
     for w, (fw, sw) in enumerate(zip(f["per_window_wall_s"],
@@ -252,17 +354,34 @@ def report(res: Dict) -> str:
         lines.append(f"{w:<8}{fw:>18.4f}{sw:>16.4f}")
     lines += [
         "",
-        f"steady state: fleet {f['steady_state_wall_s']:.4f}s "
-        f"({f['streams_per_sec_steady']:.1f} streams/s)  sequential "
-        f"{s['steady_state_wall_s']:.4f}s "
-        f"({s['streams_per_sec_steady']:.1f} streams/s)  "
+        f"steady state (median): fleet {f['steady_state_median_s']:.4f}s "
+        f"({f['wall_per_stream_steady_s'] * 1e3:.1f} ms/stream, "
+        f"{f['dispatches_per_sec_steady']:.1f} dispatch/s)  sequential "
+        f"{s['steady_state_median_s']:.4f}s "
+        f"({s['wall_per_stream_steady_s'] * 1e3:.1f} ms/stream, "
+        f"{s['dispatches_per_sec_steady']:.1f} dispatch/s)  "
         f"speedup {tr['speedup_fleet_vs_sequential']:.2f}x",
         f"fleet dispatches: {f['dispatches']} "
         f"({f['dispatches_per_window']:.2f}/window; sequential pays "
         f"{s['dispatches']})",
         f"retraces after first window per bucket: "
         f"{f['retraces_after_first_window']}  (buckets: {f['trace_counts']})",
+        f"staging-buffer allocations (whole run): {f['staging_allocs']}",
         f"fleet-vs-sequential max param diff: {tr['max_param_abs_diff']:.2e}",
+        "",
+        "# fleet inference (one vmapped predict vs N sequential predicts)",
+        f"steady state (median): fleet "
+        f"{fi['fleet']['steady_state_median_s'] * 1e3:.2f}ms "
+        f"(1 dispatch/window)  sequential "
+        f"{fi['sequential']['steady_state_median_s'] * 1e3:.2f}ms "
+        f"({fi['n_streams']} dispatches/window)  "
+        f"speedup {fi['speedup_fleet_vs_sequential']:.2f}x",
+        f"per-stream parity: {fi['per_stream_parity_max_abs_diff']:.2e}",
+        f"int8 sync: {fi['int8_sync']['sync_bytes_int8_per_stream']:.0f} B"
+        f"/stream vs {fi['int8_sync']['sync_bytes_float_per_stream']:.0f} B "
+        f"float ({fi['int8_sync']['transfer_ratio']:.1f}x smaller), "
+        f"batched int8 predict "
+        f"{fi['int8_sync']['steady_state_median_s'] * 1e3:.2f}ms",
         "",
         "# executor parity (fleet run vs N sequential single-stream runs)",
         f"max per-window RMSE divergence: {par['rmse_max_abs_diff']:.2e}",
@@ -293,8 +412,23 @@ def main() -> None:
     p.add_argument("--windows", type=int, default=None)
     p.add_argument("--epochs", type=int, default=None)
     p.add_argument("--records", type=int, default=None)
+    p.add_argument("--devices", type=int, default=None,
+                   help="host devices to expose to XLA (default: the "
+                        "machine's core count); the fleet paths shard "
+                        "their stream axis across them")
     p.add_argument("--out", default="BENCH_fleet.json")
     args = p.parse_args()
+
+    # must land before the first (lazy) jax import anywhere below: expose
+    # the cores as XLA devices so the fleet's stream axis has a mesh
+    # (appended to any inherited XLA_FLAGS; an inherited device-count flag
+    # wins so an outer harness can still pin it)
+    n_dev = args.devices or os.cpu_count() or 1
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            (flags + " " if flags else "")
+            + f"--xla_force_host_platform_device_count={n_dev}")
 
     if args.smoke:
         defaults = dict(n_streams=4, n_windows=4, epochs=3,

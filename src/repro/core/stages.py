@@ -328,13 +328,74 @@ class FleetStage(Stage):
         return {"fleet": {sid: self.stage(**kw) for sid, kw in fleet.items()}}
 
 
+class FleetInference(Stage):
+    """The batched fleet eval/inference contract: the whole fleet's
+    per-stream predictions in **one** vmapped device dispatch
+    (``FleetForecaster.predict_fleet``), mirroring the aggregated train
+    dispatch — same ``{stream_id: kwargs}`` contract and per-stream
+    ``StageOutput`` results as the per-stream :class:`FleetStage` lift it
+    replaces, so executors drive it unchanged.
+
+    Each stream's ``StageOutput`` carries the shared aggregate wall (the
+    same convention the fleet training dispatch uses for
+    ``t_speed_train``).  A one-stream fleet delegates to the wrapped
+    single-stream stage, keeping that path byte-identical to the pre-fleet
+    code.  ``kind="speed"`` resolves the per-stream batch-model fallback
+    (a stream with no synced speed model serves ``fallback_params`` and is
+    flagged) *before* the aggregated dispatch, so an all-fallback fleet
+    predicts bit-identically to the batched batch-inference stage."""
+
+    def __init__(self, fleet_forecaster, stage: Stage, kind: str):
+        self.forecaster = fleet_forecaster
+        self.stage = stage
+        self.kind = kind
+        self.name = stage.name
+
+    def compute(self, *, fleet: Dict[StreamId, Dict[str, Any]]
+                ) -> Dict[str, Any]:
+        sids = list(fleet)
+        if len(sids) <= 1:
+            return {"fleet": {sid: self.stage(**kw)
+                              for sid, kw in fleet.items()}}
+        t0 = time.perf_counter()
+        params: List[Any] = []
+        fallback: Dict[StreamId, bool] = {}
+        for sid in sids:
+            kw = fleet[sid]
+            if self.kind == "speed":
+                fb = kw.get("speed_params") is None
+                p = kw.get("fallback_params") if fb else kw["speed_params"]
+                if p is None:
+                    raise ValueError(
+                        "speed_inference: no speed model and no fallback")
+                fallback[sid] = fb
+            else:
+                p = kw["batch_params"]
+            params.append(p)
+        preds = self.forecaster.predict_fleet(
+            params, [fleet[sid]["x"] for sid in sids])
+        wall = time.perf_counter() - t0
+        out: Dict[StreamId, StageOutput] = {}
+        for sid, pred in zip(sids, preds):
+            values = {"pred": pred}
+            if self.kind == "speed":
+                values["fallback"] = fallback[sid]
+            out[sid] = StageOutput(values=values, wall_s=wall)
+        return {"fleet": out}
+
+
 class FleetSpeedTraining(Stage):
     """Whole-fleet speed training in one vmapped device dispatch
     (``FleetForecaster.train_fleet``), plus the per-stream Algorithm-1 eval
-    predictions the single-stream ``SpeedTraining`` stashes.  Drift gating
-    happens *above* this stage: the caller passes only the streams whose
-    gate said retrain, and the stream-count buckets absorb the varying
-    subset sizes."""
+    predictions the single-stream ``SpeedTraining`` stashes — themselves
+    aggregated into one ``predict_fleet`` dispatch per model (the fresh
+    speed models read straight from the device-resident stacked fit
+    output; the batch models stack per stream), instead of 2N per-stream
+    predicts.  The per-stream params handles stay lazy
+    (``FleetParamView``): a host pytree materializes only at a publish
+    boundary.  Drift gating happens *above* this stage: the caller passes
+    only the streams whose gate said retrain, and the stream-count buckets
+    absorb the varying subset sizes."""
 
     name = "speed_training"
 
@@ -349,14 +410,21 @@ class FleetSpeedTraining(Stage):
         bp = resolve_fleet_params(batch_params, sids)
         params_list, train_wall_s = fc.train_fleet(
             [fleet_data[s] for s in sids], [keys[s] for s in sids])
+        ev = [i for i, s in enumerate(sids) if len(fleet_data[s]["x"]) > 0]
+        preds_speed: Dict[int, np.ndarray] = {}
+        preds_batch: Dict[int, np.ndarray] = {}
+        if ev:
+            xs = [fleet_data[sids[i]]["x"] for i in ev]
+            preds_speed = dict(zip(ev, fc.predict_fleet(
+                [params_list[i] for i in ev], xs)))
+            preds_batch = dict(zip(ev, fc.predict_fleet(
+                [bp[sids[i]] for i in ev], xs)))
         fleet = {}
-        for sid, params in zip(sids, params_list):
-            x, y = fleet_data[sid]["x"], fleet_data[sid]["y"]
+        for i, (sid, params) in enumerate(zip(sids, params_list)):
             eval_preds = eval_y = None
-            if len(x) > 0:
-                eval_preds = (fc.predict(params, x),
-                              fc.predict(bp[sid], x))
-                eval_y = y
+            if i in preds_speed:
+                eval_preds = (preds_speed[i], preds_batch[i])
+                eval_y = fleet_data[sid]["y"]
             fleet[sid] = {"params": params, "eval_preds": eval_preds,
                           "eval_y": eval_y}
         return {"fleet": fleet, "train_wall_s": train_wall_s}
@@ -366,11 +434,14 @@ class FleetSpeedTraining(Stage):
 class FleetStages:
     """The fleet-level stage set: the *same* single-stream stage objects
     (``single`` is a fully functional ``PipelineStages``) lifted per-stream
-    by ``FleetStage``, plus the one-dispatch whole-fleet speed training."""
+    by ``FleetStage``, plus the one-dispatch whole-fleet stages — speed
+    training (``FleetSpeedTraining``) and batch/speed inference
+    (``FleetInference``), each one aggregated device dispatch per window
+    instead of N."""
 
     single: PipelineStages
-    batch_inference: FleetStage
-    speed_inference: FleetStage
+    batch_inference: FleetInference
+    speed_inference: FleetInference
     weight_solve: FleetStage
     hybrid_combine: FleetStage
     speed_training: FleetSpeedTraining
@@ -386,8 +457,10 @@ class FleetStages:
         single = PipelineStages.build(fleet_forecaster, mode, dwa_solver)
         return cls(
             single=single,
-            batch_inference=FleetStage(single.batch_inference),
-            speed_inference=FleetStage(single.speed_inference),
+            batch_inference=FleetInference(fleet_forecaster,
+                                           single.batch_inference, "batch"),
+            speed_inference=FleetInference(fleet_forecaster,
+                                           single.speed_inference, "speed"),
             weight_solve=FleetStage(single.weight_solve),
             hybrid_combine=FleetStage(single.hybrid_combine),
             speed_training=FleetSpeedTraining(fleet_forecaster),

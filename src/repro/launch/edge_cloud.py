@@ -148,12 +148,14 @@ def run_real_fleet(args) -> None:
         dep = ALL_DEPLOYMENTS[name]()
         gate = DriftGate() if args.gated else None
         ex = FleetBusExecutor(stages, dep, paper_topology(), cost,
-                              window_period_s=args.period, gate=gate)
+                              window_period_s=args.period, gate=gate,
+                              quantized_sync=args.quantized)
         res = ex.run(streams, bp, jax.random.PRNGKey(1))
         print(f"\n[{dep.name}] {args.streams} streams x {args.windows} "
               f"windows ({args.scenario} scenario"
-              f"{', drift-gated' if args.gated else ''}), measured Table-3 "
-              f"breakdown:")
+              f"{', drift-gated' if args.gated else ''}"
+              f"{', int8 sync' if args.quantized else ''}), measured "
+              f"Table-3 breakdown:")
         _print_table(res.table3(),
                      e2e=(res.mean_e2e_s()
                           if any(res.e2e_s.values()) else None))
@@ -307,7 +309,9 @@ def main() -> None:
     p.add_argument("--quantized", action="store_true",
                    help="int8 model sync: 4x smaller transfers; with --real "
                         "the edge also serves the quantized model through "
-                        "the int8 dequant-matmul kernel")
+                        "the int8 dequant-matmul kernel (in fleet mode, "
+                        "per-stream int8 model topics and batched int8 "
+                        "fleet inference)")
     p.add_argument("--fast", action="store_true")
     p.add_argument("--real", action="store_true",
                    help="run real LSTM compute through the TopicBus "

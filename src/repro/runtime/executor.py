@@ -33,12 +33,17 @@ model, exactly the paper's Sec. 6.2 outcome.
 
 The fleet executors lift both modalities to N streams under one deployment:
 ``InProcessFleetExecutor`` is the synchronous loop over a ``FleetStages``
-set (per-stream inference through the same stage objects, whole-fleet speed
-training in one vmapped dispatch per window), and ``FleetBusExecutor``
-multiplexes the bus topics per stream (``stream/window/t03``, one wildcard
-subscription per module) while aggregating every stream's window into that
-single training dispatch.  Both consult an optional ``DriftGate`` so
-stationary streams skip their retrain and keep serving the prior model.
+set, and ``FleetBusExecutor`` multiplexes the bus topics per stream
+(``stream/window/t03``, one wildcard subscription per module).  The fleet
+hot path is one device dispatch per stage per window: whole-fleet speed
+training (vmapped ``train_fleet``) *and* whole-fleet batch/speed inference
+(vmapped ``predict_fleet`` via ``FleetInference``) — the bus executor
+aggregates every stream's window-``t`` payload per stage before firing,
+then fans the per-stream results back onto their own topics.  Both consult
+an optional ``DriftGate`` so stationary streams skip their retrain and keep
+serving the prior model; ``FleetBusExecutor(quantized_sync=True)`` ships
+each retrained stream's model as an int8 ``QTensor`` tree on its own model
+topic and serves the fleet through the batched int8 kernel.
 """
 from __future__ import annotations
 
@@ -718,14 +723,25 @@ class FleetBusExecutor(_BusRuntime):
     per-stream topics (``stream/window/<sid>`` etc., one wildcard
     subscription per module) under **one** ``Deployment``, per-stream
     serving state in a ``FleetState``, and every stream's window-``t``
-    payload aggregated into one whole-fleet speed-training dispatch.
+    payload aggregated into one whole-fleet dispatch per stage — speed
+    training *and* batch/speed inference (``FleetInference`` -> vmapped
+    ``predict_fleet``): once the window's last stream message reaches a
+    module's site, the whole fleet computes in one device dispatch and the
+    per-stream results fan back out onto their own topics.
 
     Fresh models publish per stream on ``model/latest/<sid>`` carrying that
     stream's real parameter byte count, so the sync-transfer accounting
     scales with how many streams actually retrained — with a ``DriftGate``,
     stationary streams neither train nor transfer, while their inference
     chain keeps serving the prior model (the per-stream dynamic-learning
-    policy the paper applies globally)."""
+    policy the paper applies globally).
+
+    ``quantized_sync=True`` extends the int8 sync path to the fleet: each
+    retrained stream's params materialize at the publish boundary, quantize
+    (``serving.quantize.quantize_tree``), and ship as an int8 ``QTensor``
+    tree on that stream's model topic with its real int8 byte count; the
+    serving side then runs the *batched* int8 fleet inference — stacked
+    ``QTensor`` trees through the ``int8_matmul`` kernel under vmap."""
 
     def __init__(
         self,
@@ -738,6 +754,8 @@ class FleetBusExecutor(_BusRuntime):
         window_period_s: float = 30.0,
         strict_capacity: bool = False,
         gate: Optional[DriftGate] = None,
+        quantized_sync: bool = False,
+        quant_min_size: int = 64,
     ):
         self.stages = stages
         self.dep = deployment
@@ -747,6 +765,8 @@ class FleetBusExecutor(_BusRuntime):
         self.period = window_period_s
         self.strict = strict_capacity
         self.gate = gate
+        self.quantized_sync = quantized_sync
+        self.quant_min_size = quant_min_size
 
     @property
     def _single_stages(self) -> PipelineStages:
@@ -762,6 +782,7 @@ class FleetBusExecutor(_BusRuntime):
         self._train_walls: Dict[Tuple[StreamId, int], float] = {}
         self._pending: Dict[Tuple[StreamId, int], Dict[str, Message]] = {}
         self._pending_train: Dict[int, Dict[StreamId, Message]] = {}
+        self._pending_infer: Dict[Tuple[str, int], Dict[StreamId, Message]] = {}
         self._retrain_log: Dict[StreamId, List[bool]] = {
             sid: [] for sid in ids}
         self._inject_t: Dict[Tuple[StreamId, int], float] = {}
@@ -785,38 +806,73 @@ class FleetBusExecutor(_BusRuntime):
 
     # -- handlers ------------------------------------------------------------
 
-    def _on_batch(self, msg: Message) -> None:
+    def _gather_infer(self, kind: str, msg: Message
+                      ) -> Optional[Dict[StreamId, Message]]:
+        """Collect the window's per-stream messages for one inference
+        stage; returns the full set once the last stream arrives (the same
+        aggregation contract the training handler uses), else None."""
         sid, w = msg.payload["stream"], msg.payload["window"]
+        pend = self._pending_infer.setdefault((kind, w), {})
+        pend[sid] = msg
+        if len(pend) < len(self.ids):
+            return None
+        return self._pending_infer.pop((kind, w))
+
+    def _on_batch(self, msg: Message) -> None:
+        w = msg.payload["window"]
         if w < self.start_window:
             return
-        comm = msg.deliver_time - msg.publish_time + self.cost.ingest_s
-        out = self.stages.single.batch_inference(
-            batch_params=self._bp[sid], x=msg.payload["x"])
-        self._schedule(
-            "batch_inference", out.wall_s, comm,
-            lambda: self.bus.publish(
-                stream_topic(T_BATCH, sid),
-                {"stream": sid, "window": w, "kind": "batch",
-                 "pred": out["pred"], "wall_s": out.wall_s,
-                 "fallback": False},
-                _nbytes(out["pred"]), self.dep.site_of("batch_inference")))
+        pend = self._gather_infer("batch", msg)
+        if pend is None:
+            return
+        # the whole fleet's window w is at the batch-inference site: one
+        # aggregated vmapped dispatch, per-stream results fan back out
+        comm = max(m.deliver_time - m.publish_time
+                   for m in pend.values()) + self.cost.ingest_s
+        out = self.stages.batch_inference(fleet={
+            sid: dict(batch_params=self._bp[sid], x=pend[sid].payload["x"])
+            for sid in self.ids})["fleet"]
+        wall = out[self.ids[0]].wall_s
+
+        def publish_preds():
+            for sid in self.ids:
+                o = out[sid]
+                self.bus.publish(
+                    stream_topic(T_BATCH, sid),
+                    {"stream": sid, "window": w, "kind": "batch",
+                     "pred": o["pred"], "wall_s": o.wall_s,
+                     "fallback": False},
+                    _nbytes(o["pred"]), self.dep.site_of("batch_inference"))
+
+        self._schedule("batch_inference", wall, comm, publish_preds)
 
     def _on_speed(self, msg: Message) -> None:
-        sid, w = msg.payload["stream"], msg.payload["window"]
+        w = msg.payload["window"]
         if w < self.start_window:
             return
-        comm = msg.deliver_time - msg.publish_time + self.cost.ingest_s
-        out = self.stages.single.speed_inference(
-            speed_params=self._fleet.state(sid).speed_params,
-            x=msg.payload["x"], fallback_params=self._bp[sid])
-        self._schedule(
-            "speed_inference", out.wall_s, comm,
-            lambda: self.bus.publish(
-                stream_topic(T_SPEED, sid),
-                {"stream": sid, "window": w, "kind": "speed",
-                 "pred": out["pred"], "wall_s": out.wall_s,
-                 "fallback": out["fallback"]},
-                _nbytes(out["pred"]), self.dep.site_of("speed_inference")))
+        pend = self._gather_infer("speed", msg)
+        if pend is None:
+            return
+        comm = max(m.deliver_time - m.publish_time
+                   for m in pend.values()) + self.cost.ingest_s
+        out = self.stages.speed_inference(fleet={
+            sid: dict(speed_params=self._fleet.state(sid).speed_params,
+                      x=pend[sid].payload["x"],
+                      fallback_params=self._bp[sid])
+            for sid in self.ids})["fleet"]
+        wall = out[self.ids[0]].wall_s
+
+        def publish_preds():
+            for sid in self.ids:
+                o = out[sid]
+                self.bus.publish(
+                    stream_topic(T_SPEED, sid),
+                    {"stream": sid, "window": w, "kind": "speed",
+                     "pred": o["pred"], "wall_s": o.wall_s,
+                     "fallback": o["fallback"]},
+                    _nbytes(o["pred"]), self.dep.site_of("speed_inference"))
+
+        self._schedule("speed_inference", wall, comm, publish_preds)
 
     def _on_part(self, msg: Message) -> None:
         sid, w = msg.payload["stream"], msg.payload["window"]
@@ -895,11 +951,22 @@ class FleetBusExecutor(_BusRuntime):
         def publish_models():
             for s in train_ids:
                 o = out["fleet"][s]
+                params_pub = o["params"]
+                if self.quantized_sync:
+                    # the publish boundary: the stream's lazy params handle
+                    # materializes here, quantizes on the training site, and
+                    # the per-stream model topic carries the real int8 byte
+                    # count — the edge then serves the whole fleet through
+                    # the batched int8 kernel
+                    from repro.serving.quantize import quantize_tree
+
+                    params_pub = quantize_tree(params_pub,
+                                               min_size=self.quant_min_size)
                 self.bus.publish(
                     stream_topic(T_MODEL, s),
-                    {"stream": s, "window": w, "params": o["params"],
+                    {"stream": s, "window": w, "params": params_pub,
                      "eval_preds": o["eval_preds"], "eval_y": o["eval_y"]},
-                    _nbytes(o["params"]), self.dep.site_of("speed_training"))
+                    _nbytes(params_pub), self.dep.site_of("speed_training"))
 
         self._schedule("speed_training", out.wall_s, comm, publish_models)
 
@@ -932,19 +999,29 @@ class FleetBusExecutor(_BusRuntime):
 
     def _warmup(self, streams: Dict[StreamId, WindowedStream]) -> None:
         """Compile every jit path once (the full-fleet train bucket and the
-        inference shapes), so measured windows are steady-state windows.
-        Runs outside the event loop; the drift gate never sees it, and the
-        dispatch counter is snapshotted after it."""
+        aggregated inference dispatches — with int8 sync on, also the
+        QTensor-structured fleet predict), so measured windows are
+        steady-state windows.  Runs outside the event loop; the drift gate
+        never sees it, and the dispatch counter is snapshotted after it."""
         data = {sid: streams[sid].supervised(0) for sid in self.ids}
         tr = self.stages.speed_training(
             fleet_data=data, batch_params=self._bp,
             keys={sid: self._keys[sid][0] for sid in self.ids})
-        sid0 = self.ids[0]
-        if len(data[sid0]["x"]) > 0:
-            self.stages.single.batch_inference(
-                batch_params=self._bp[sid0], x=data[sid0]["x"])
-            self.stages.single.speed_inference(
-                speed_params=tr["fleet"][sid0]["params"], x=data[sid0]["x"])
+        if all(len(data[sid]["x"]) > 0 for sid in self.ids):
+            self.stages.batch_inference(fleet={
+                sid: dict(batch_params=self._bp[sid], x=data[sid]["x"])
+                for sid in self.ids})
+            sp = {sid: tr["fleet"][sid]["params"] for sid in self.ids}
+            if self.quantized_sync:
+                from repro.serving.quantize import quantize_tree
+
+                sp = {sid: quantize_tree(sp[sid],
+                                         min_size=self.quant_min_size)
+                      for sid in self.ids}
+            self.stages.speed_inference(fleet={
+                sid: dict(speed_params=sp[sid], x=data[sid]["x"],
+                          fallback_params=self._bp[sid])
+                for sid in self.ids})
 
     def run(self, streams: Dict[StreamId, WindowedStream], batch_params: Any,
             key, n_windows: Optional[int] = None) -> FleetBusRunResult:

@@ -35,6 +35,35 @@ vmapped cold-start fit over a stacked leading stream axis, cached per
 like batch padding: padded stream slots carry an all-zero validity mask, so
 they contribute zero loss and zero gradient and their (discarded) params
 never move.
+
+The fleet hot path is memory-resident across windows:
+
+* **staged device buffers** — each window's examples are written into a
+  persistent per-(stream bucket, shape bucket) staging buffer and shipped
+  in one transfer, instead of re-padding and re-``np.stack``-ing a fresh
+  fleet batch every window (``staging_allocs`` counts buffer allocations;
+  after a bucket's first window it stays flat).
+* **device-resident stacked params** — ``train_fleet`` returns lazy
+  :class:`FleetParamView`\\ s over the stacked fit output; per-stream host
+  pytrees materialize only when something actually needs one (a model-topic
+  publish, a byte count), while the serving path (``predict_fleet``) reads
+  the stacked tree directly with zero re-stacking.  The optimizer state is
+  donated through the train step: each window's fit consumes the previous
+  window's opt-state buffers in place.
+* **a local device mesh** — when the process exposes more than one device
+  (a TPU slice, or CPU cores surfaced via
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` as
+  ``benchmarks/bench_fleet.py`` does), the stacked stream axis is sharded
+  across the largest power-of-two device prefix that divides the stream
+  bucket.  Per-stream numerics are bitwise identical to the single-device
+  vmap — streams never interact — but the fleet fit and the fleet predict
+  run data-parallel across the mesh.
+
+``predict_fleet`` is the serving-side counterpart of ``train_fleet``: the
+whole fleet's per-stream predictions in **one** vmapped dispatch, cached
+per (stream bucket, inference shape bucket), with the same stream/batch
+padding discipline (padded slots and padded rows are sliced away before
+anything observable).
 """
 from __future__ import annotations
 
@@ -45,6 +74,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.models.model import Model
 from repro.training.optimizer import Optimizer, adamw
@@ -95,6 +125,98 @@ def bucket_streams(s: int) -> int:
     if s <= 0:
         raise ValueError(f"cannot bucket an empty fleet (s={s})")
     return _next_pow2(s)
+
+
+def stream_mesh_devices(sb: int) -> List[Any]:
+    """The largest power-of-two prefix of the local devices that divides the
+    stream bucket ``sb`` — the mesh the fleet's stacked stream axis shards
+    over.  One device (the tests' configuration) degrades to no sharding;
+    stream buckets are powers of two, so any pow2 device count divides any
+    bucket at least as large."""
+    devs = jax.devices()
+    d = 1
+    while d * 2 <= len(devs) and sb % (d * 2) == 0:
+        d *= 2
+    return devs[:d]
+
+
+class _FleetStack:
+    """Owner of one fleet fit's stacked, device-resident params pytree.
+    ``stacked`` keeps a leading stream-bucket axis (possibly sharded across
+    the local mesh); views slice it lazily."""
+
+    __slots__ = ("stacked",)
+
+    def __init__(self, stacked: Params):
+        self.stacked = stacked
+
+    def dim(self) -> int:
+        return int(jax.tree_util.tree_leaves(self.stacked)[0].shape[0])
+
+
+class FleetParamView:
+    """One stream's params inside a device-resident stacked fleet pytree.
+
+    Semantically this *is* the per-stream params tree — it registers as a
+    pytree whose flatten materializes the slice, so ``tree_map``, ``jit``,
+    byte counts and ``quantize_tree`` all see the ordinary per-stream tree
+    — but materialization is lazy: until a publish boundary (or any other
+    consumer) flattens it, no per-stream host pytree exists, and
+    ``predict_fleet`` recognizes sibling views of one stacked buffer and
+    serves the whole fleet from it with zero re-stacking.
+
+    A view keeps its owner's stacked tree alive even after materializing
+    (the zero-restack serving path needs it); a long-lived straggler view
+    therefore pins its fit's whole stacked tree — a deliberate trade at
+    speed-model scale, where a stacked fleet tree is a few hundred KB."""
+
+    __slots__ = ("owner", "slot", "_tree")
+
+    def __init__(self, owner: _FleetStack, slot: int):
+        self.owner = owner
+        self.slot = slot
+        self._tree: Optional[Params] = None
+
+    def tree(self) -> Params:
+        """The materialized per-stream params pytree (cached)."""
+        if self._tree is None:
+            j = self.slot
+            self._tree = jax.tree_util.tree_map(lambda a: a[j],
+                                                self.owner.stacked)
+        return self._tree
+
+    # the per-stream tree's mapping surface, for eager callers that index
+    # params directly (e.g. model.loss_fn outside jit)
+    def __getitem__(self, key):
+        return self.tree()[key]
+
+    def keys(self):
+        return self.tree().keys()
+
+
+jax.tree_util.register_pytree_node(
+    FleetParamView,
+    lambda v: ((v.tree(),), None),
+    lambda aux, ch: ch[0],
+)
+
+
+def materialize_params(params: Params) -> Params:
+    """Resolve a (possibly lazy) per-stream params handle to a plain
+    pytree.  Plain trees pass through untouched."""
+    return params.tree() if isinstance(params, FleetParamView) else params
+
+
+def _staging_buffer(cache: Dict[Tuple, np.ndarray], key: Tuple,
+                    shape: Tuple[int, ...], dtype) -> Tuple[np.ndarray, bool]:
+    """Get-or-allocate a persistent host staging buffer; returns the buffer
+    and whether this call allocated it (the caller counts allocations)."""
+    buf = cache.get(key)
+    if buf is not None:
+        return buf, False
+    buf = np.zeros(shape, dtype)
+    cache[key] = buf
+    return buf, True
 
 
 def _make_epoch_scan(model: Model, opt: Optimizer, epochs: int,
@@ -164,8 +286,23 @@ class CompiledForecaster:
         self._mask_checked: set = set()
         self._init_fn = jax.jit(model.init)
         self._opt_init = jax.jit(self.opt.init)
-        self._predict_fn = (jax.jit(predict_fn) if predict_fn is not None
-                            else None)
+        self._predict_raw = predict_fn
+        self._predict_traces: Dict[int, int] = {}
+        if predict_fn is not None:
+            traces = self._predict_traces
+
+            def counted_predict(params, x):
+                # executes only while XLA traces — counts real retraces per
+                # inference shape bucket (a new params *structure*, e.g. an
+                # int8 QTensor tree, traces its bucket once more)
+                traces[x.shape[0]] = traces.get(x.shape[0], 0) + 1
+                return predict_fn(params, x)
+
+            self._predict_fn: Optional[Callable] = jax.jit(counted_predict)
+        else:
+            self._predict_fn = None
+        self._predict_bufs: Dict[Tuple, np.ndarray] = {}
+        self.staging_allocs = 0
         self.last_losses: Optional[np.ndarray] = None
 
     # -- compile-cache introspection ----------------------------------------
@@ -182,6 +319,11 @@ class CompiledForecaster:
     def trace_counts(self) -> Dict[int, int]:
         """Per-shape-bucket XLA trace counts."""
         return dict(self._trace_counts)
+
+    def predict_trace_counts(self) -> Dict[int, int]:
+        """Per-inference-shape-bucket XLA trace counts of the predict
+        executable."""
+        return dict(self._predict_traces)
 
     # -- the cached fit executable ------------------------------------------
 
@@ -262,16 +404,28 @@ class CompiledForecaster:
         self.last_losses = np.asarray(losses)
         return params, time.perf_counter() - t0
 
+    def _stage_predict(self, x: np.ndarray) -> np.ndarray:
+        """Pad ``x`` up to its shape bucket in a persistent per-bucket host
+        staging buffer — a ragged final batch costs one row copy plus a pad
+        memset, never a fresh concatenate allocation, so steady-state
+        serving neither retraces nor re-stages."""
+        n = x.shape[0]
+        nb = _next_pow2(n)  # bucket inference shapes too: O(log n) compiles
+        key = (nb,) + x.shape[1:] + (x.dtype.str,)
+        buf, allocated = _staging_buffer(self._predict_bufs, key,
+                                         (nb,) + x.shape[1:], x.dtype)
+        self.staging_allocs += allocated
+        np.copyto(buf[:n], x)
+        buf[n:] = 0
+        return buf
+
     def predict(self, params: Params, x: np.ndarray) -> np.ndarray:
         if self._predict_fn is None:
             raise ValueError("CompiledForecaster built without a predict_fn")
         x = np.asarray(x)
         n = x.shape[0]
-        nb = _next_pow2(n)  # bucket inference shapes too: O(log n) compiles
-        if n < nb:
-            x = np.concatenate(
-                [x, np.zeros((nb - n,) + x.shape[1:], x.dtype)], axis=0)
-        return np.asarray(self._predict_fn(params, jnp.asarray(x)))[:n]
+        buf = self._stage_predict(x)
+        return np.asarray(self._predict_fn(params, jnp.asarray(buf)))[:n]
 
 
 class FleetForecaster:
@@ -308,6 +462,16 @@ class FleetForecaster:
     ``benchmarks/bench_fleet.py`` asserts is one per window for a
     homogeneous fleet); ``trace_counts`` exposes per-bucket XLA traces so
     the zero-retrace-after-first-window property stays testable.
+
+    The hot path is memory-resident across windows (see the module
+    docstring): window data is staged into persistent stacked buffers and
+    shipped in one transfer per tensor, the previous window's optimizer
+    state is donated back into the fit executable, the stacked fit output
+    stays device-resident behind lazy :class:`FleetParamView` handles, and
+    both the fit and ``predict_fleet`` shard the stream axis across the
+    local device mesh when one exists.  ``predict_fleet`` serves the whole
+    fleet's per-stream predictions in one dispatch (``predict_dispatches``
+    counts them; ``predict_trace_counts`` exposes the per-bucket traces).
     """
 
     def __init__(
@@ -329,7 +493,19 @@ class FleetForecaster:
         self.opt = self.single.opt
         self._fleet_cache: Dict[Tuple[int, int], Callable] = {}
         self._trace_counts: Dict[Tuple[int, int], int] = {}
+        self._carry_cache: Dict[int, Callable] = {}
+        # persistent host staging buffers, stacked opt-state carries, and
+        # stream shardings, all keyed per bucket — the device-resident state
+        self._train_bufs: Dict[Tuple[int, int], Dict[str, np.ndarray]] = {}
+        self._opt_carry: Dict[Tuple[int, int], Any] = {}
+        self._shardings: Dict[int, Optional[NamedSharding]] = {}
+        self._predict_cache: Dict[int, Callable] = {}
+        self._predict_traces: Dict[Tuple[int, int], int] = {}
+        self._predict_bufs: Dict[Tuple, np.ndarray] = {}
+        self._stack_tree_cache: Dict[Tuple, Tuple] = {}
+        self._staging_allocs = 0
         self.train_dispatches = 0
+        self.predict_dispatches = 0
         # per-stream minibatch-loss trajectories of the last train_fleet call
         self.last_losses: Optional[List[Optional[np.ndarray]]] = None
 
@@ -358,6 +534,61 @@ class FleetForecaster:
         """Per-(stream-count bucket, shape bucket) XLA trace counts."""
         return dict(self._trace_counts)
 
+    def predict_trace_counts(self) -> Dict[Tuple[int, int], int]:
+        """Per-(stream bucket, inference shape bucket) XLA trace counts of
+        the fleet predict executable."""
+        return dict(self._predict_traces)
+
+    @property
+    def staging_allocs(self) -> int:
+        """Total host staging-buffer allocations (fleet train + fleet
+        predict + the wrapped single-stream trainer's predict buffers).
+        Steady-state windows of a known bucket allocate nothing: data is
+        re-staged into the same buffers, never re-stacked."""
+        return self._staging_allocs + self.single.staging_allocs
+
+    # -- the device mesh and the staged buffers ------------------------------
+
+    def _stream_sharding(self, sb: int) -> Optional[NamedSharding]:
+        """The stream-axis sharding for bucket ``sb`` over the local device
+        mesh, or None on a single device.  Streams are independent, so
+        sharding the stacked axis is pure data parallelism — bitwise the
+        same per-stream numerics as the unsharded vmap."""
+        if sb not in self._shardings:
+            devs = stream_mesh_devices(sb)
+            if len(devs) <= 1:
+                self._shardings[sb] = None
+            else:
+                mesh = Mesh(np.asarray(devs), ("stream",))
+                self._shardings[sb] = NamedSharding(mesh,
+                                                    PartitionSpec("stream"))
+        return self._shardings[sb]
+
+    def _put(self, a: np.ndarray, sb: int):
+        shard = self._stream_sharding(sb)
+        return jnp.asarray(a) if shard is None else jax.device_put(a, shard)
+
+    def _train_staging(self, sb: int, nb: int,
+                       data0: Dict[str, np.ndarray],
+                       key0) -> Dict[str, np.ndarray]:
+        """The persistent stacked staging buffers for one (stream bucket,
+        shape bucket): x/y/mask plus the per-stream init/perm key rows.
+        Allocated once per bucket (counted), refilled in place every
+        window."""
+        bufs = self._train_bufs.get((sb, nb))
+        if bufs is None:
+            # one bundle of arrays per bucket, counted as one allocation
+            karr = np.asarray(key0)
+            bufs = {"mask": np.zeros((sb, nb), np.float32),
+                    "ik": np.zeros((sb,) + karr.shape, karr.dtype),
+                    "pk": np.zeros((sb,) + karr.shape, karr.dtype)}
+            for k, v in data0.items():
+                v = np.asarray(v)
+                bufs[k] = np.zeros((sb, nb) + v.shape[1:], v.dtype)
+            self._train_bufs[(sb, nb)] = bufs
+            self._staging_allocs += 1
+        return bufs
+
     # -- the cached fleet-fit executable ------------------------------------
 
     def _fleet_fit_fn(self, sb: int, nb: int) -> Callable:
@@ -375,17 +606,45 @@ class FleetForecaster:
         def cold_fit(init_key, perm_key, x, y, mask):
             params = init(init_key)
             opt_state = opt_init(params)
-            params, _, losses = scan_fit(params, opt_state, x, y, mask,
-                                         perm_key)
-            return params, losses
+            params, opt_state, losses = scan_fit(params, opt_state, x, y,
+                                                 mask, perm_key)
+            return params, opt_state, losses
 
-        def fleet_fit(init_keys, perm_keys, x, y, mask):
-            # executes only while XLA traces — counts real retraces
+        def fleet_fit(opt_carry, init_keys, perm_keys, x, y, mask):
+            # executes only while XLA traces — counts real retraces.
+            # ``opt_carry`` is the previous window's stacked opt state: its
+            # value is dead (every window cold-starts from init_keys), but
+            # donating it lets XLA alias this window's opt-state output into
+            # the same buffers, so the optimizer state stays resident in one
+            # allocation across the run.  Params are NOT donated — the
+            # stacked fit output is the fleet's live serving state
+            # (FleetParamView slices it lazily) and must survive the next
+            # window's fit.
             counts[cache_key] += 1
             return jax.vmap(cold_fit)(init_keys, perm_keys, x, y, mask)
 
-        fn = jax.jit(fleet_fit)
+        # every input and output carries a leading stream-bucket axis, so on
+        # a mesh ONE explicit sharding pins them all — without it, GSPMD is
+        # free to lay the first window's carry out differently from the
+        # fit's own opt output, forcing a second lowering at window 1
+        shard = self._stream_sharding(sb)
+        kw = ({} if shard is None
+              else {"in_shardings": shard, "out_shardings": shard})
+        fn = jax.jit(fleet_fit, donate_argnums=(0,), keep_unused=True, **kw)
         self._fleet_cache[cache_key] = fn
+        return fn
+
+    def _carry_init_fn(self, sb: int) -> Callable:
+        """One-time (per stream bucket) builder of the initial stacked
+        opt-state carry the donated fit consumes (laid out on the same
+        mesh as the fit's own opt output)."""
+        fn = self._carry_cache.get(sb)
+        if fn is None:
+            init, opt_init = self.model.init, self.opt.init
+            shard = self._stream_sharding(sb)
+            kw = {} if shard is None else {"out_shardings": shard}
+            fn = jax.jit(jax.vmap(lambda k: opt_init(init(k))), **kw)
+            self._carry_cache[sb] = fn
         return fn
 
     # -- the fleet fit -------------------------------------------------------
@@ -395,6 +654,12 @@ class FleetForecaster:
                     ) -> Tuple[List[Params], float]:
         """Cold-start fit of one speed model per stream; returns the
         per-stream params (same order as ``datas``) and the total wall.
+
+        Multi-stream groups return lazy :class:`FleetParamView` handles
+        over the device-resident stacked fit output — semantically the
+        per-stream trees (they flatten to them), materialized only when a
+        consumer actually needs one; a single-stream group returns its
+        plain tree from the delegated single-stream path.
 
         ``keys[i]`` plays exactly the role ``key`` plays in
         ``CompiledForecaster.train`` for stream ``i``."""
@@ -428,34 +693,152 @@ class FleetForecaster:
                    out: List[Optional[Params]]) -> np.ndarray:
         s = len(idxs)
         sb = bucket_streams(s)
-        split = [jax.random.split(keys[i]) for i in idxs]
-        init_keys = [k[0] for k in split]
-        perm_keys = [k[1] for k in split]
-        padded = [pad_to_bucket(datas[i], nb) for i in idxs]
-        self._check_mask_honored(datas[idxs[0]], padded[0], nb, init_keys[0])
-        xs = [p["x"] for p in padded]
-        ys = [p["y"] for p in padded]
-        masks = [p["mask"] for p in padded]
+        bufs = self._train_staging(sb, nb, datas[idxs[0]], keys[idxs[0]])
+        for j, i in enumerate(idxs):
+            d = datas[i]
+            n = len(next(iter(d.values())))
+            for k, v in d.items():
+                bufs[k][j, :n] = np.asarray(v)
+                bufs[k][j, n:] = 0
+            bufs["mask"][j, :n] = 1.0
+            bufs["mask"][j, n:] = 0.0
+            ik, pk = jax.random.split(keys[i])
+            bufs["ik"][j] = np.asarray(ik)
+            bufs["pk"][j] = np.asarray(pk)
         for j in range(sb - s):
             # stream-axis padding: zero data + all-zero validity mask, so the
             # slot's loss/grad are exactly zero (any key gives a fine inert
             # init; fold_in keeps it deterministic)
-            xs.append(np.zeros_like(xs[0]))
-            ys.append(np.zeros_like(ys[0]))
-            masks.append(np.zeros_like(masks[0]))
+            for k in datas[idxs[0]]:
+                bufs[k][s + j] = 0
+            bufs["mask"][s + j] = 0.0
             pad_key = jax.random.fold_in(keys[idxs[0]], 1 + j)
             ik, pk = jax.random.split(pad_key)
-            init_keys.append(ik)
-            perm_keys.append(pk)
-        params_S, losses_S = self._fleet_fit_fn(sb, nb)(
-            jnp.stack(init_keys), jnp.stack(perm_keys),
-            jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)),
-            jnp.asarray(np.stack(masks)))
+            bufs["ik"][s + j] = np.asarray(ik)
+            bufs["pk"][s + j] = np.asarray(pk)
+        padded0 = {k: bufs[k][0] for k in list(datas[idxs[0]]) + ["mask"]}
+        self._check_mask_honored(datas[idxs[0]], padded0, nb,
+                                 jnp.asarray(bufs["ik"][0]))
+        ik_d = self._put(bufs["ik"], sb)
+        carry = self._opt_carry.pop((sb, nb), None)
+        if carry is None:
+            carry = self._carry_init_fn(sb)(ik_d)
+        params_S, opt_S, losses_S = self._fleet_fit_fn(sb, nb)(
+            carry, ik_d, self._put(bufs["pk"], sb),
+            self._put(bufs["x"], sb), self._put(bufs["y"], sb),
+            self._put(bufs["mask"], sb))
+        self._opt_carry[(sb, nb)] = opt_S
         jax.block_until_ready(params_S)
         self.train_dispatches += 1
+        owner = _FleetStack(params_S)
         for j, i in enumerate(idxs):
-            out[i] = jax.tree_util.tree_map(lambda a, j=j: a[j], params_S)
+            out[i] = FleetParamView(owner, j)
         return np.asarray(losses_S)[:s]
+
+    # -- one-dispatch fleet inference ----------------------------------------
+
+    def _predict_fleet_fn(self, sb: int) -> Callable:
+        """The cached vmapped predict executable for stream bucket ``sb``
+        (jit's own cache handles the inference shape buckets; the traced
+        body counts real retraces per (sb, nb))."""
+        fn = self._predict_cache.get(sb)
+        if fn is None:
+            pf = self.single._predict_raw
+            traces = self._predict_traces
+
+            def fleet_predict(params_S, x_S):
+                # executes only while XLA traces — counts real retraces (a
+                # new params structure, e.g. an int8 QTensor tree, traces
+                # its bucket once more)
+                k = (sb, x_S.shape[1])
+                traces[k] = traces.get(k, 0) + 1
+                return jax.vmap(pf)(params_S, x_S)
+
+            fn = jax.jit(fleet_predict)
+            self._predict_cache[sb] = fn
+        return fn
+
+    def _stack_fleet_params(self, params_seq: List[Params], sb: int
+                            ) -> Tuple[Params, bool]:
+        """The stacked params pytree for one fleet predict: sibling
+        :class:`FleetParamView`\\ s of one stacked fit output in slot order
+        are served from it directly (zero re-stacking, and already laid
+        out on the stream mesh — the common ungated serving path);
+        anything else stacks the materialized per-stream trees leaf-wise,
+        repeating stream 0 into the padded slots (their predictions are
+        sliced away).  Returns the stacked tree and whether it lives on
+        the stream mesh (so the staged batch can be shipped to match)."""
+        first = params_seq[0]
+        if isinstance(first, FleetParamView):
+            owner = first.owner
+            if (all(isinstance(p, FleetParamView) and p.owner is owner
+                    and p.slot == j for j, p in enumerate(params_seq))
+                    and owner.dim() == sb):
+                return owner.stacked, True
+        # an identical params sequence (the shared batch model every window,
+        # a gated fleet's unchanged serving set) reuses its stacked tree —
+        # the cache holds the sequence itself, so the ids in the key stay
+        # valid, and the identity re-check makes id reuse harmless
+        ck = (sb,) + tuple(id(p) for p in params_seq)
+        hit = self._stack_tree_cache.get(ck)
+        if hit is not None and all(a is b for a, b in zip(hit[0],
+                                                          params_seq)):
+            return hit[1], False
+        trees = [materialize_params(p) for p in params_seq]
+        trees += [trees[0]] * (sb - len(trees))
+        stacked = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *trees)
+        if len(self._stack_tree_cache) >= 16:
+            self._stack_tree_cache.clear()
+        self._stack_tree_cache[ck] = (list(params_seq), stacked)
+        return stacked, False
+
+    def predict_fleet(self, params_seq: Sequence[Params],
+                      xs: Sequence[np.ndarray]) -> List[np.ndarray]:
+        """Per-stream predictions for the whole fleet in **one** vmapped
+        device dispatch: stream ``i``'s batch ``xs[i]`` under its own
+        params ``params_seq[i]``.
+
+        Batches are padded to a common inference shape bucket (persistent
+        staging buffer, padded rows sliced away per stream) and the stream
+        axis to its stream bucket, exactly mirroring ``train_fleet``; the
+        stacked tree and the staged batch shard across the local device
+        mesh when one exists.  Per-stream results match
+        ``CompiledForecaster.predict`` to vmap-batching tolerance (<=1e-6;
+        ``bench_fleet`` tracks it), and a one-stream call delegates to it
+        byte-identically.  Int8 ``QTensor`` trees (the fleet's quantized
+        sync path) stack like any pytree and run the batched
+        ``int8_matmul`` kernel under vmap."""
+        if self.single._predict_raw is None:
+            raise ValueError("FleetForecaster built without a predict_fn")
+        params_seq = list(params_seq)
+        xs = [np.asarray(x) for x in xs]
+        if len(params_seq) != len(xs):
+            raise ValueError(f"{len(params_seq)} param trees but "
+                             f"{len(xs)} stream batches")
+        S = len(xs)
+        if S == 0:
+            return []
+        if S == 1:
+            # byte-identical single-stream path (no vmap, no S padding)
+            return [self.single.predict(params_seq[0], xs[0])]
+        ns = [x.shape[0] for x in xs]
+        nb = _next_pow2(max(max(ns), 1))
+        sb = bucket_streams(S)
+        stacked, on_mesh = self._stack_fleet_params(params_seq, sb)
+        key = (sb, nb) + xs[0].shape[1:] + (xs[0].dtype.str,)
+        buf, allocated = _staging_buffer(
+            self._predict_bufs, key, (sb, nb) + xs[0].shape[1:],
+            xs[0].dtype)
+        self._staging_allocs += allocated
+        for j, x in enumerate(xs):
+            np.copyto(buf[j, :ns[j]], x)
+            buf[j, ns[j]:] = 0  # only the padding tail, not the whole buffer
+        buf[S:] = 0  # padded stream slots
+        x_dev = self._put(buf, sb) if on_mesh else jnp.asarray(buf)
+        preds = self._predict_fleet_fn(sb)(stacked, x_dev)
+        self.predict_dispatches += 1
+        preds = np.asarray(preds)
+        return [preds[j, :ns[j]] for j in range(S)]
 
     def _check_mask_honored(self, data: Dict[str, np.ndarray],
                             padded: Dict[str, np.ndarray], nb: int,

@@ -336,6 +336,117 @@ def test_gated_bus_skips_stationary_streams(cfg):
     assert stats["skipped"] == res.skipped_retrains()
 
 
+# ---------------------------------------------------------------------------
+# one-dispatch fleet serving: vmapped predict, device-resident state, int8
+# ---------------------------------------------------------------------------
+
+
+def test_predict_fleet_matches_single_predicts(cfg):
+    """One vmapped dispatch serves every stream's (ragged) batch under its
+    own params, to <=1e-6 of the sequential CompiledForecaster.predict —
+    and the padded stream slots never leak into real streams' results."""
+    from repro.models import get_model, lstm as lstm_mod
+
+    model = get_model(cfg)
+    ff = FleetForecaster(model, epochs=3, batch_size=64,
+                         predict_fn=lambda p, x: lstm_mod.predict(cfg, p, x))
+    S = 3  # buckets to 4: one padded stream slot in train AND predict
+    datas = [_window(150, seed=i) for i in range(S)]
+    keys = [jax.random.fold_in(jax.random.PRNGKey(2), i) for i in range(S)]
+    params, _ = ff.train_fleet(datas, keys)
+
+    xs = [_window(100, seed=10)["x"], _window(150, seed=11)["x"],
+          _window(37, seed=12)["x"]]  # ragged: 3 different batch buckets
+    d0 = ff.predict_dispatches
+    preds = ff.predict_fleet(params, xs)
+    assert ff.predict_dispatches - d0 == 1
+    assert len(preds) == S  # exactly the real streams, no padded slots
+    for i in range(S):
+        assert preds[i].shape == (len(xs[i]), 1)
+        single = ff.single.predict(params[i], xs[i])
+        np.testing.assert_allclose(preds[i], single, atol=1e-6, rtol=0)
+
+    # a one-stream call delegates to the single-stream path byte-identically
+    (p1,) = ff.predict_fleet([params[0]], [xs[0]])
+    np.testing.assert_array_equal(p1, ff.single.predict(params[0], xs[0]))
+
+
+def test_fleet_device_resident_no_restaging(cfg):
+    """The device-resident hot path: after a bucket's first window, further
+    windows perform zero new XLA traces and zero host staging-buffer
+    allocations (data is re-staged in place, params stay stacked on
+    device)."""
+    from repro.models import get_model, lstm as lstm_mod
+
+    model = get_model(cfg)
+    ff = FleetForecaster(model, epochs=3, batch_size=64,
+                         predict_fn=lambda p, x: lstm_mod.predict(cfg, p, x))
+    S = 4
+    keys = [jax.random.fold_in(jax.random.PRNGKey(3), i) for i in range(S)]
+
+    def one_window(w):
+        datas = [_window(150, seed=100 * w + i) for i in range(S)]
+        params, _ = ff.train_fleet(datas, keys)
+        xs = [d["x"] for d in datas]
+        ff.predict_fleet(params, xs)
+        return params
+
+    one_window(0)
+    traces0 = ff.retrace_count
+    ptraces0 = dict(ff.predict_trace_counts())
+    allocs0 = ff.staging_allocs
+    dispatches0 = (ff.train_dispatches, ff.predict_dispatches)
+    for w in (1, 2):
+        one_window(w)
+    assert ff.retrace_count == traces0  # 0 retraces after window 1
+    assert ff.predict_trace_counts() == ptraces0
+    assert ff.staging_allocs == allocs0  # 0 host re-stacks after window 1
+    assert ff.train_dispatches == dispatches0[0] + 2
+    assert ff.predict_dispatches == dispatches0[1] + 2
+
+
+def test_fleet_quantized_sync_e2e(fleet_setup, cfg):
+    """Fleet int8 sync end to end: every retrained stream's model arrives
+    as a QTensor tree on its own model topic, the measured transfer is the
+    int8 size (<0.45x the float sync), and the fleet's hybrid accuracy
+    stays within the single-stream int8 bound (mirrors
+    tests/test_quantize.py)."""
+    from repro.serving.quantize import QTensor
+
+    streams, bp = fleet_setup
+    key = jax.random.PRNGKey(1)
+
+    runs = {}
+    for label, quant in (("float", False), ("int8", True)):
+        stages, _ = _fleet_stages(cfg)
+        ex = FleetBusExecutor(stages, edge_cloud_integrated(),
+                              paper_topology(), CostModel(ingest_s=0.5),
+                              quantized_sync=quant)
+        runs[label] = ex.run(streams, bp, key)
+
+    def model_msgs(res):
+        return [m for m in res.message_log
+                if m.topic.startswith(T_MODEL + "/")]
+
+    fmsgs, qmsgs = model_msgs(runs["float"]), model_msgs(runs["int8"])
+    assert len(qmsgs) == N_WINDOWS * len(streams)  # ungated: every window
+    for m in qmsgs:
+        leaves = jax.tree_util.tree_leaves(
+            m.payload["params"], is_leaf=lambda x: isinstance(x, QTensor))
+        assert any(isinstance(x, QTensor) for x in leaves), m.topic
+    # the per-stream model transfer carries the real int8 byte count
+    fbytes = {(m.topic, m.payload["window"]): m.nbytes for m in fmsgs}
+    for m in qmsgs:
+        assert m.nbytes < 0.45 * fbytes[(m.topic, m.payload["window"])]
+    # serving accuracy: int8 fleet inference tracks the float fleet
+    rf = runs["float"].mean_rmse()["hybrid"]
+    rq = runs["int8"].mean_rmse()["hybrid"]
+    assert rq < rf * 1.05, (rf, rq)
+    # every stream still served every inference window
+    for sid in streams:
+        assert len(runs["int8"].results[sid].records) == N_WINDOWS - 1
+
+
 def test_gated_inprocess_serves_prior_model_on_skip(fleet_setup, cfg):
     """A skipped window's speed inference still runs — on the prior model
     (not the batch fallback), so rmse_speed stays distinct from
