@@ -430,6 +430,41 @@ class FleetSpeedTraining(Stage):
         return {"fleet": fleet, "train_wall_s": train_wall_s}
 
 
+class ServingStage(Stage):
+    """The request plane's batched answer dispatch: every serving tick, the
+    active queries of *all* streams predict in **one** vmapped
+    ``FleetForecaster.predict_fleet`` call over the device-resident serving
+    params (streams with no active query contribute a zero-row batch, so
+    the executable comes from the same (stream bucket, shape bucket) cache
+    the per-window inference path warms).  Shared-wall convention: the one
+    measured ``__call__`` wall is the whole tick's cost, charged once by
+    the executor under the serving site's worker occupancy.
+
+    ``ticks`` / ``dispatches`` count serving ticks and the vmapped
+    dispatches they cost — the bench gate asserts dispatches/tick == 1.
+    A one-stream fleet delegates inside ``predict_fleet`` to the single
+    path (which keeps its own trace counters); it is still one dispatch,
+    counted as such here.
+    """
+
+    name = "serving"
+
+    def __init__(self, fleet_forecaster):
+        self.forecaster = fleet_forecaster
+        self.ticks = 0
+        self.dispatches = 0
+
+    def compute(self, *, params_seq: List[Any], xs: List[np.ndarray]
+                ) -> Dict[str, Any]:
+        fc = self.forecaster
+        d0 = getattr(fc, "predict_dispatches", 0)
+        preds = fc.predict_fleet(params_seq, xs)
+        d1 = getattr(fc, "predict_dispatches", 0)
+        self.dispatches += (d1 - d0) if len(xs) > 1 else 1
+        self.ticks += 1
+        return {"preds": preds}
+
+
 @dataclass
 class FleetStages:
     """The fleet-level stage set: the *same* single-stream stage objects
@@ -447,6 +482,7 @@ class FleetStages:
     speed_training: FleetSpeedTraining
     model_sync: FleetStage
     data_sync: FleetStage
+    serving: Optional[ServingStage] = None
 
     @classmethod
     def build(cls, fleet_forecaster, mode="dynamic",
@@ -466,6 +502,7 @@ class FleetStages:
             speed_training=FleetSpeedTraining(fleet_forecaster),
             model_sync=FleetStage(single.model_sync),
             data_sync=FleetStage(single.data_sync),
+            serving=ServingStage(fleet_forecaster),
         )
 
     @property

@@ -149,7 +149,8 @@ def run_real_fleet(args) -> None:
         gate = DriftGate() if args.gated else None
         ex = FleetBusExecutor(stages, dep, paper_topology(), cost,
                               window_period_s=args.period, gate=gate,
-                              quantized_sync=args.quantized)
+                              quantized_sync=args.quantized,
+                              qps=args.qps, serve_slots=args.slots)
         res = ex.run(streams, bp, jax.random.PRNGKey(1))
         print(f"\n[{dep.name}] {args.streams} streams x {args.windows} "
               f"windows ({args.scenario} scenario"
@@ -175,6 +176,16 @@ def run_real_fleet(args) -> None:
                 f"{sid}:{st['retrained']}R/{st['skipped']}S"
                 for sid, st in sorted(per.items()))
             print(f"  gate: {gated}")
+        if res.serving is not None:
+            s = res.serving
+            print(f"  request plane: {s['n_answered']}/{s['n_requests']} "
+                  f"answered ({s['n_starved']} starved) over "
+                  f"{s['ticks']} ticks, "
+                  f"{s['dispatches_per_tick']:.2f} dispatches/tick, "
+                  f"{s['slots']} slots")
+            print(f"    offered={s['offered_qps']:.1f} qps "
+                  f"sustained={s['sustained_qps']:.1f} qps "
+                  f"p50={s['p50_s']*1e3:.2f}ms p99={s['p99_s']*1e3:.2f}ms")
         if res.failures:
             print(f"  !! {len(res.failures)} capacity failures "
                   f"(first: {res.failures[0]})")
@@ -320,6 +331,16 @@ def main() -> None:
                    help="virtual seconds between stream windows (--real); "
                         "shrink it below the training time to watch "
                         "stale-model inference emerge from event ordering")
+    p.add_argument("--qps", type=float, default=0.0,
+                   help="request plane: open-loop user-query arrival rate "
+                        "across the fleet (point/horizon/what-if forecast "
+                        "queries on per-stream request topics, answered by "
+                        "continuous-batched serving ticks from the "
+                        "device-resident fleet state; fleet mode, i.e. "
+                        "--real --streams > 1)")
+    p.add_argument("--slots", type=int, default=4,
+                   help="request plane: fixed batch slots in the "
+                        "slot-recycling continuous batcher")
     args = p.parse_args()
 
     if args.streams > 1 and not args.real:
@@ -328,6 +349,10 @@ def main() -> None:
     if args.gated and args.streams <= 1:
         p.error("--gated requires --streams > 1 (drift-gated retraining is "
                 "a fleet-executor policy)")
+    if args.qps > 0 and not (args.real and args.streams > 1):
+        p.error("--qps requires fleet mode (--real with --streams > 1): the "
+                "request plane serves from the fleet executor's "
+                "device-resident state")
     if args.real and args.streams > 1:
         run_real_fleet(args)
     elif args.real:

@@ -77,9 +77,16 @@ from repro.runtime.modules import (
     T_BATCH,
     T_HYBRID,
     T_MODEL,
+    T_REQUEST,
+    T_RESPONSE,
     T_SPEED,
     T_STREAM,
     stream_topic,
+)
+from repro.serving.query_plane import (
+    QueryPlane,
+    latency_stats,
+    open_loop_trace,
 )
 
 Params = Any
@@ -597,6 +604,11 @@ class FleetBusRunResult(FleetRunResult):
     failures: List[str] = field(default_factory=list)
     e2e_s: Dict[StreamId, Dict[int, float]] = field(default_factory=dict)
     message_log: List[Message] = field(default_factory=list)
+    # the request plane (when the run served queries): every query object
+    # (answers + admission/finish stamps filled in) and the aggregate
+    # latency/QPS/dispatch stats
+    queries: List[Any] = field(default_factory=list)
+    serving: Optional[Dict[str, Any]] = None
 
     def table3(self) -> Dict[str, Dict[str, float]]:
         return self.ledger.table()
@@ -741,7 +753,17 @@ class FleetBusExecutor(_BusRuntime):
     (``serving.quantize.quantize_tree``), and ship as an int8 ``QTensor``
     tree on that stream's model topic with its real int8 byte count; the
     serving side then runs the *batched* int8 fleet inference — stacked
-    ``QTensor`` trees through the ``int8_matmul`` kernel under vmap."""
+    ``QTensor`` trees through the ``int8_matmul`` kernel under vmap.
+
+    ``qps > 0`` (or an explicit ``query_trace``) turns on the request
+    plane: user queries arrive open-loop on ``serve/request/<sid>``, a
+    slot-recycling :class:`~repro.serving.query_plane.QueryPlane` admits
+    them into ``serve_slots`` fixed batch slots, and every serving tick
+    answers all active slots across all streams in **one** vmapped
+    ``predict_fleet`` dispatch over the device-resident serving params —
+    interleaved with the training windows under the serving site's worker
+    occupancy, answers published on ``serve/response/<sid>``, per-request
+    latency and sustained QPS reported in ``FleetBusRunResult.serving``."""
 
     def __init__(
         self,
@@ -756,6 +778,10 @@ class FleetBusExecutor(_BusRuntime):
         gate: Optional[DriftGate] = None,
         quantized_sync: bool = False,
         quant_min_size: int = 64,
+        qps: float = 0.0,
+        serve_slots: int = 4,
+        query_trace: Optional[List[Any]] = None,
+        query_seed: int = 0,
     ):
         self.stages = stages
         self.dep = deployment
@@ -767,10 +793,34 @@ class FleetBusExecutor(_BusRuntime):
         self.gate = gate
         self.quantized_sync = quantized_sync
         self.quant_min_size = quant_min_size
+        self.qps = qps
+        self.serve_slots = serve_slots
+        self.query_trace = query_trace
+        self.query_seed = query_seed
 
     @property
     def _single_stages(self) -> PipelineStages:
         return self.stages.single
+
+    @property
+    def _serving_enabled(self) -> bool:
+        return (self.qps > 0 or self.query_trace is not None) \
+            and self.stages.serving is not None
+
+    def _serving_site_name(self) -> str:
+        """Where serving ticks run: an explicit ``serving`` placement when
+        the deployment names one, else co-located with speed inference (the
+        paper's edge serving role) — so serving contends for the same
+        ``Site.workers`` pool as the inference chain."""
+        try:
+            return self.dep.site_of("serving")
+        except KeyError:
+            return self.dep.site_of("speed_inference")
+
+    def _site(self, module: str):
+        if module == "serving":
+            return self.topo.sites[self._serving_site_name()]
+        return super()._site(module)
 
     # -- per-run state -------------------------------------------------------
 
@@ -788,6 +838,13 @@ class FleetBusExecutor(_BusRuntime):
         self._inject_t: Dict[Tuple[StreamId, int], float] = {}
         self.e2e_s: Dict[StreamId, Dict[int, float]] = {sid: {} for sid in ids}
         self._ys: Dict[Tuple[StreamId, int], np.ndarray] = {}
+        self._qplane: Optional[QueryPlane] = (
+            QueryPlane(ids, self.serve_slots)
+            if self._serving_enabled else None)
+        self.queries: List[Any] = []
+        self._query_lat: Dict[int, float] = {}
+        self._tick_pending = False
+        self._squant_bp: Dict[StreamId, Any] = {}
         self._wire()
 
     def _wire(self) -> None:
@@ -803,6 +860,15 @@ class FleetBusExecutor(_BusRuntime):
         sub(T_HYBRID, "archiving", self._on_archive)
         sub(T_HYBRID, "data_injection", self._on_user)
         sub(T_MODEL, "model_sync", self._on_model_sync)
+        if self._serving_enabled:
+            # the request plane: stream windows feed the serving contexts,
+            # request topics feed the admission queue, responses land back
+            # at the user-facing injection site
+            serve_site = self._serving_site_name()
+            bus.subscribe(T_STREAM + "/+", serve_site, self._on_serve_ctx)
+            bus.subscribe(T_REQUEST + "/+", serve_site, self._on_request)
+            bus.subscribe(T_RESPONSE + "/+", dep.site_of("data_injection"),
+                          self._on_response)
 
     # -- handlers ------------------------------------------------------------
 
@@ -995,6 +1061,84 @@ class FleetBusExecutor(_BusRuntime):
         if (sid, w) in self._inject_t:
             self.e2e_s[sid][w] = msg.deliver_time - self._inject_t[(sid, w)]
 
+    # -- the request plane ---------------------------------------------------
+
+    def _serving_fallback(self, sid: StreamId) -> Params:
+        """What a stream serves before its first model sync: the batch
+        model — quantized once (and cached) under int8 sync, so the fleet's
+        stacked serving tree stays structurally homogeneous whatever mix of
+        synced/unsynced streams a tick catches."""
+        if not self.quantized_sync:
+            return self._bp[sid]
+        p = self._squant_bp.get(sid)
+        if p is None:
+            from repro.serving.quantize import quantize_tree
+
+            p = self._squant_bp[sid] = quantize_tree(
+                self._bp[sid], min_size=self.quant_min_size)
+        return p
+
+    def _serving_params(self) -> Tuple[List[Params], Dict[StreamId, int]]:
+        """The device-resident serving set, read in fleet order with zero
+        host round-trip: each stream's installed speed model (a lazy
+        ``FleetParamView`` handle into the stacked fit output under float
+        sync, an int8 ``QTensor`` tree under quantized sync) or its batch
+        fallback, plus the training window each model came from — the
+        staleness stamp every answer carries."""
+        params: List[Params] = []
+        windows: Dict[StreamId, int] = {}
+        for sid in self.ids:
+            st = self._fleet.state(sid)
+            params.append(st.speed_params if st.speed_params is not None
+                          else self._serving_fallback(sid))
+            windows[sid] = st.window
+        return params, windows
+
+    def _on_serve_ctx(self, msg: Message) -> None:
+        self._qplane.observe_window(
+            msg.payload["stream"], msg.payload["x"], msg.payload["window"])
+        self._maybe_tick()
+
+    def _on_request(self, msg: Message) -> None:
+        q = msg.payload["query"]
+        self._qplane.submit(q)
+        self.queries.append(q)
+        self._maybe_tick()
+
+    def _on_response(self, msg: Message) -> None:
+        q = msg.payload["query"]
+        self._query_lat[q.uid] = msg.deliver_time - q.arrived_at
+
+    def _maybe_tick(self) -> None:
+        """Start a serving tick unless one is already in flight (slots stay
+        occupied until the running tick's virtual completion — the
+        continuous-batching invariant: admit/retire happen at tick
+        boundaries, never mid-dispatch)."""
+        if not self._serving_enabled or self._tick_pending:
+            return
+        plane = self._qplane
+        plane.admit(self.kernel.now)
+        batch = plane.build_batch()
+        if batch is None:
+            return
+        by_stream, xs = batch
+        self._tick_pending = True
+        params_seq, model_windows = self._serving_params()
+        out = self.stages.serving(params_seq=params_seq, xs=xs)
+        plane.apply(by_stream, out["preds"], model_windows)
+        serve_site = self._serving_site_name()
+
+        def finish():
+            self._tick_pending = False
+            for q in plane.retire(self.kernel.now):
+                self.bus.publish(
+                    stream_topic(T_RESPONSE, q.stream),
+                    {"stream": q.stream, "query": q},
+                    _nbytes(np.asarray(q.answer, np.float32)), serve_site)
+            self._maybe_tick()
+
+        self._schedule("serving", out.wall_s, 0.0, finish)
+
     # -- driver --------------------------------------------------------------
 
     def _warmup(self, streams: Dict[StreamId, WindowedStream]) -> None:
@@ -1023,6 +1167,29 @@ class FleetBusExecutor(_BusRuntime):
                           fallback_params=self._bp[sid])
                 for sid in self.ids})
 
+    def _warmup_serving(self, streams: Dict[StreamId, WindowedStream]) -> None:
+        """Pre-compile the serving tick's row buckets (1..slots, pow2) so
+        measured ticks never swallow an XLA trace: a tick batches at most
+        ``serve_slots`` rows per stream, and the zero-row streams ride the
+        same (stream bucket, shape bucket) executable.  Counters are
+        snapshotted after this, like the training warmup."""
+        ref = None
+        for sid in self.ids:
+            x = np.asarray(streams[sid].supervised(0)["x"])
+            if len(x) > 0:
+                ref = np.asarray(x[-1])
+                break
+        if ref is None:
+            return
+        params_seq = [self._serving_fallback(sid) for sid in self.ids]
+        k = 1
+        while k <= max(self.serve_slots, 1):
+            xs = [np.repeat(ref[None], k, axis=0)] + [
+                np.zeros((0,) + ref.shape, ref.dtype)
+                for _ in range(len(self.ids) - 1)]
+            self.stages.serving(params_seq=params_seq, xs=xs)
+            k *= 2
+
     def run(self, streams: Dict[StreamId, WindowedStream], batch_params: Any,
             key, n_windows: Optional[int] = None) -> FleetBusRunResult:
         from repro.streams.injection import BusInjector
@@ -1035,8 +1202,28 @@ class FleetBusExecutor(_BusRuntime):
         self._bp = resolve_fleet_params(batch_params, ids)
         self._keys = fleet_key_chains(key, ids, n)
         self._warmup(streams)
+        trace: List[Any] = []
+        if self._serving_enabled:
+            self._warmup_serving(streams)
+            trace = self.query_trace
+            if trace is None:
+                # open-loop load for the whole run past the first window
+                # (serving needs a context, so arrivals start at period)
+                n_req = max(1, int(round(self.qps * self.period
+                                         * max(n - 1, 1))))
+                trace = open_loop_trace(ids, self.qps, n_req,
+                                        start=self.period,
+                                        seed=self.query_seed)
+            inj_site = self.dep.site_of("data_injection")
+            for q in trace:
+                self.kernel.at(q.arrived_at, lambda q=q: self.bus.publish(
+                    stream_topic(T_REQUEST, q.stream),
+                    {"stream": q.stream, "query": q}, 256.0, inj_site))
         fc = self.stages.speed_training.forecaster
         dispatches0 = fc.train_dispatches
+        srv = self.stages.serving
+        ticks0 = srv.ticks if srv is not None else 0
+        sdisp0 = srv.dispatches if srv is not None else 0
 
         for sid in ids:
             injector = BusInjector(self.kernel, self.bus, T_STREAM,
@@ -1047,6 +1234,37 @@ class FleetBusExecutor(_BusRuntime):
                 self._ys[(sid, w)] = data["y"]
                 self._inject_t[(sid, w)] = injector.schedule_window(w, data)
         self.kernel.run()
+
+        serving_stats = None
+        if self._serving_enabled and trace:
+            lat = self._query_lat
+            answered = [q for q in trace if q.uid in lat]
+            arr = [q.arrived_at for q in trace]
+            offered = ((len(trace) - 1) / (max(arr) - min(arr))
+                       if len(trace) > 1 and max(arr) > min(arr)
+                       else float("inf"))
+            if answered:
+                span = (max(q.arrived_at + lat[q.uid] for q in answered)
+                        - min(arr))
+                sustained = (len(answered) / span if span > 0
+                             else float("inf"))
+            else:
+                sustained = 0.0
+            ticks = srv.ticks - ticks0
+            sdisp = srv.dispatches - sdisp0
+            serving_stats = {
+                "n_requests": len(trace),
+                "n_answered": len(answered),
+                "n_starved": len(trace) - len(answered),
+                "ticks": ticks,
+                "dispatches": sdisp,
+                "dispatches_per_tick": (sdisp / ticks if ticks
+                                        else float("nan")),
+                "offered_qps": offered,
+                "sustained_qps": sustained,
+                "slots": self.serve_slots,
+                **latency_stats([lat[q.uid] for q in answered]),
+            }
 
         results = {}
         for sid in ids:
@@ -1066,4 +1284,6 @@ class FleetBusExecutor(_BusRuntime):
             failures=self.failures,
             e2e_s={sid: dict(per) for sid, per in self.e2e_s.items()},
             message_log=self.bus.log,
+            queries=list(self.queries),
+            serving=serving_stats,
         )

@@ -32,6 +32,8 @@ T_SPEED = "results/speed"
 T_HYBRID = "results/hybrid"
 T_MODEL = "model/latest"
 T_ARCHIVE = "archive/put"
+T_REQUEST = "serve/request"
+T_RESPONSE = "serve/response"
 
 
 def stream_topic(base: str, stream_id: str) -> str:

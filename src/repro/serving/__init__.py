@@ -1,2 +1,9 @@
 from repro.serving.batching import BatchScheduler, Request, Slot  # noqa: F401
 from repro.serving.engine import Engine, ServeStats, greedy_sample  # noqa: F401
+from repro.serving.query_plane import (  # noqa: F401
+    ForecastQuery,
+    QueryPlane,
+    answer_query_unbatched,
+    latency_stats,
+    open_loop_trace,
+)

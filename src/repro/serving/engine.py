@@ -53,6 +53,7 @@ class Engine:
             lambda p, b: self.model.prefill(p, b, max_len)
         )
         self._decode = jax.jit(self.model.decode_step)
+        self._batch_axes: Any = None
 
     def generate(
         self,
@@ -97,35 +98,118 @@ class Engine:
 
     # -- continuous batching ------------------------------------------------
 
+    def _cache_batch_axes(self, n_slots: int) -> Any:
+        """Per-leaf batch axis of the KV-cache pytree, probed once from
+        ``init_cache`` shape structure (the axis whose extent changes with
+        the batch size) — so the slot scatter works over any model family's
+        cache layout without hard-coding it."""
+        if self._batch_axes is None:
+            if self.model.init_cache is None:
+                raise ValueError(
+                    f"{self.cfg.family} model exposes no init_cache; "
+                    "serve() needs one to recycle batch slots")
+            a = jax.eval_shape(
+                lambda: self.model.init_cache(n_slots, self.max_len))
+            b = jax.eval_shape(
+                lambda: self.model.init_cache(n_slots + 1, self.max_len))
+
+            def axis(sa, sb):
+                for i, (x, y) in enumerate(zip(sa.shape, sb.shape)):
+                    if x != y:
+                        return i
+                raise ValueError(
+                    f"cache leaf {sa.shape} has no batch axis")
+
+            self._batch_axes = jax.tree_util.tree_map(axis, a, b)
+        return self._batch_axes
+
+    @staticmethod
+    def _scatter_slots(cache: Any, new_cache: Any, axes: Any,
+                       ids: np.ndarray) -> Any:
+        """Overwrite the admitted slots' rows of the persistent cache with
+        the fresh prefill's rows, leaving every other slot's decode state
+        untouched."""
+        idx = jnp.asarray(ids)
+
+        def put(c, n, ax):
+            sel = (slice(None),) * ax + (idx,)
+            return c.at[sel].set(n[sel])
+
+        return jax.tree_util.tree_map(put, cache, new_cache, axes)
+
     def serve(self, requests: List[Request], n_slots: int = 4,
               pad_id: int = 0) -> List[Request]:
-        """Drive a wave-batching loop until all requests finish.
+        """Slot-recycling continuous batching: admit into free slots every
+        tick, one batched decode dispatch per tick, retire and refill
+        without draining a wave.
 
-        Each admission wave left-pads the admitted prompts to a common
-        length, prefills once, and decodes to the wave's longest request
-        (shorter requests are truncated to their own max_new_tokens).  Waves
-        repeat until the queue drains — simple, deterministic semantics the
-        runtime simulator can reason about; slot-level interleaving would be
-        the next refinement on real hardware.
-        """
+        Each tick: (1) queued requests FIFO-admit into free slots — their
+        prompts left-pad to a pow2-bucketed length and prefill at the fixed
+        ``(n_slots, Lb)`` shape (non-admitted rows carry pads), the fresh
+        cache rows scattering into the persistent shared cache so live
+        slots' decode state is untouched; (2) one ``(n_slots, 1)`` decode
+        dispatch advances *every* active slot — per-slot ``pos`` carries
+        each request's own position, so requests admitted at different
+        ticks interleave in the same batch; (3) finished requests retire
+        immediately and their slots refill next tick.  A short request
+        therefore never waits for a long co-batched one (the wave-batching
+        failure mode this replaces), and steady-state cost is one decode
+        dispatch per tick regardless of arrival pattern.  The tick index is
+        the clock threaded into ``admitted_at``/``finished_at``."""
         sched = BatchScheduler(n_slots)
         for r in requests:
             sched.submit(r)
         finished: List[Request] = []
+        cache: Any = None
+        axes: Any = None
+        cur_tok = np.full((n_slots,), pad_id, np.int32)
+        pos = np.zeros((n_slots,), np.int32)
+        tick = 0
         while not sched.idle:
-            admitted = sched.admit()
+            progress = False
+            admitted = sched.admit(now=float(tick))
             if admitted:
+                progress = True
                 reqs = [sched.slots[i].request for i in admitted]
-                maxlen = max(len(r.prompt) for r in reqs)
-                toks = np.full((len(reqs), maxlen), pad_id, np.int32)
-                for j, r in enumerate(reqs):
-                    toks[j, maxlen - len(r.prompt):] = r.prompt  # left-pad
-                out, _ = self.generate(toks, max_new_tokens=max(
-                    r.max_new_tokens for r in reqs))
-                for j, r in enumerate(reqs):
-                    r.generated = list(out[j][: r.max_new_tokens])
-            done = sched.retire_finished()
-            if not admitted and not done:  # defensive: avoid a silent spin
+                lb = max(len(r.prompt) for r in reqs)
+                lb = 1 << max(0, (lb - 1).bit_length())  # pow2 bucket
+                toks = np.full((n_slots, lb), pad_id, np.int32)
+                for i, r in zip(admitted, reqs):
+                    toks[i, lb - len(r.prompt):] = r.prompt  # left-pad
+                logits, new_cache = self._prefill(
+                    self.params, {"tokens": jnp.asarray(toks)})
+                first = np.asarray(greedy_sample(logits))
+                if cache is None:
+                    cache = new_cache
+                else:
+                    if axes is None:
+                        axes = self._cache_batch_axes(n_slots)
+                    cache = self._scatter_slots(
+                        cache, new_cache, axes,
+                        np.asarray(admitted, np.int32))
+                for i, r in zip(admitted, reqs):
+                    r.generated.append(int(first[i]))  # prefill's token
+                    cur_tok[i] = first[i]
+                    pos[i] = lb
+                    sched.slots[i].pos = lb
+            finished.extend(sched.retire_finished(now=float(tick)))
+            active = sched.active()
+            if active:
+                progress = True
+                logits, cache = self._decode(
+                    self.params,
+                    {"token": jnp.asarray(cur_tok[:, None]),
+                     "pos": jnp.asarray(pos)},
+                    cache)
+                tok = np.asarray(greedy_sample(logits))
+                for i in active:
+                    r = sched.slots[i].request
+                    r.generated.append(int(tok[i]))
+                    cur_tok[i] = tok[i]
+                    pos[i] += 1
+                    sched.slots[i].pos = int(pos[i])
+                finished.extend(sched.retire_finished(now=float(tick)))
+            if not progress:  # defensive: avoid a silent spin
                 raise RuntimeError("serve() made no progress")
-            finished.extend(done)
+            tick += 1
         return finished
