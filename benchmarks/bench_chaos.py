@@ -1,0 +1,141 @@
+"""Chaos benchmark: per-scenario degradation envelopes, tracked as
+``BENCH_chaos.json`` — graceful degradation as a measured, CI-gated
+property.
+
+Sections:
+
+* ``parity`` — the fault-free chaos run (an *empty* ``FaultPlane`` attached,
+  interposition active) against the plain no-plane path under identical
+  deterministic stage costs: hybrid-RMSE delta must be <= 1e-6 and train
+  dispatch counts identical, so the fault plane itself is proven to be a
+  no-op when no faults fire.
+* ``scenarios`` — every scenario in ``core.scenarios.SCENARIOS`` under one
+  fixed seed: RMSE ratio vs fault-free, p99 answer latency, max served
+  staleness, fallback fraction, fault/recovery counters, zero unhandled
+  exceptions.  Scenario-specific gates: corrupted publishes detected 100%
+  and never installed; partitioned sync keeps served staleness within the
+  watchdog bound and hybrid RMSE <= 1.5x fault-free.
+* ``determinism`` — the RNG-heaviest scenario (sensor_chaos) run twice under
+  the same seed must produce byte-identical bus logs, ledgers, and
+  forecasts; a different seed must produce a different fault schedule.
+
+    PYTHONPATH=src python -m benchmarks.bench_chaos            # full
+    PYTHONPATH=src python -m benchmarks.bench_chaos --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict
+
+SEED = 0
+
+
+def run(smoke: bool) -> Dict:
+    from repro.core.scenarios import (
+        RMSE_RATIO_MAX,
+        SCENARIOS,
+        ChaosHarness,
+        bus_signature,
+        forecast_signature,
+        ledger_signature,
+    )
+
+    if smoke:
+        h = ChaosHarness(n_streams=2, n_windows=4, records_per_window=80,
+                         qps=6.0, verbose=True)
+    else:
+        h = ChaosHarness(n_streams=3, n_windows=6, records_per_window=120,
+                         qps=8.0, verbose=True)
+
+    out: Dict = {"config": {
+        "smoke": smoke, "seed": SEED, "n_streams": h.n_streams,
+        "n_windows": h.n_windows, "records_per_window": h.rpw,
+        "period_s": h.period, "qps": h.qps,
+        "staleness_bound": h.staleness_bound,
+    }}
+
+    # -- parity: empty fault plane == no fault plane -------------------------
+    print("parity: plain (no plane) vs fault_free (empty plane) ...")
+    plain = h.run_plain()
+    env_ff, res_ff = h.run_scenario("fault_free", seed=SEED)
+    assert res_ff is not None, env_ff
+    rmse_plain = plain.mean_rmse()["hybrid"]
+    out["parity"] = {
+        "rmse_plain": rmse_plain,
+        "rmse_fault_free": env_ff["rmse_hybrid"],
+        "rmse_abs_delta": abs(rmse_plain - env_ff["rmse_hybrid"]),
+        "train_dispatches_plain": plain.train_dispatches,
+        "train_dispatches_fault_free": env_ff["train_dispatches"],
+        "forecasts_identical": (forecast_signature(plain)
+                                == forecast_signature(res_ff)),
+    }
+
+    # -- the scenario envelopes ----------------------------------------------
+    base = env_ff["rmse_hybrid"]
+    out["scenarios"] = {}
+    for name in SCENARIOS:
+        print(f"scenario: {name} ...")
+        env, res = h.run_scenario(name, seed=SEED)
+        env["rmse_ratio_vs_fault_free"] = (
+            env.get("rmse_hybrid", float("inf")) / base if base else
+            float("inf"))
+        env["rmse_ratio_max"] = RMSE_RATIO_MAX[name]
+        if name == "corrupted_int8_sync" and res is not None:
+            stats = env["fault_stats"]
+            env["corrupt_injected"] = stats.get("msg_corrupt", 0)
+            env["corrupt_detected_frac"] = (
+                env["corrupt_rejected"] / env["corrupt_injected"]
+                if env["corrupt_injected"] else 1.0)
+        out["scenarios"][name] = env
+
+    # -- determinism: same seed -> byte-identical run ------------------------
+    print("determinism: sensor_chaos x2 same seed, x1 different seed ...")
+    _, r1 = h.run_scenario("sensor_chaos", seed=SEED)
+    _, r2 = h.run_scenario("sensor_chaos", seed=SEED)
+    _, r3 = h.run_scenario("sensor_chaos", seed=SEED + 7)
+    out["determinism"] = {
+        "bus_log_identical": bus_signature(r1) == bus_signature(r2),
+        "ledger_identical": ledger_signature(r1) == ledger_signature(r2),
+        "forecasts_identical": (forecast_signature(r1)
+                                == forecast_signature(r2)),
+        "different_seed_differs": bus_signature(r1) != bus_signature(r3),
+    }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer streams/windows)")
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    args = ap.parse_args()
+
+    res = run(args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2, sort_keys=True)
+    print(f"\nwrote {args.out}")
+
+    p = res["parity"]
+    print(f"parity: rmse delta {p['rmse_abs_delta']:.2e}, dispatches "
+          f"{p['train_dispatches_fault_free']}=="
+          f"{p['train_dispatches_plain']}, forecasts identical: "
+          f"{p['forecasts_identical']}")
+    for name, env in res["scenarios"].items():
+        if env.get("unhandled_exception"):
+            print(f"{name:>20}: EXCEPTION {env['unhandled_exception']}")
+            continue
+        print(f"{name:>20}: rmse x{env['rmse_ratio_vs_fault_free']:.3f} "
+              f"(max {env['rmse_ratio_max']}), "
+              f"p99 {env['p99_latency_s']*1e3:.1f}ms, "
+              f"stale<= {env['max_staleness']}, "
+              f"fallback {env['fallback_frac']:.2f}, "
+              f"answered {env['n_answered']} (starved {env['n_starved']})")
+    d = res["determinism"]
+    print(f"determinism: bus {d['bus_log_identical']}, ledger "
+          f"{d['ledger_identical']}, forecasts {d['forecasts_identical']}, "
+          f"seed-sensitivity {d['different_seed_differs']}")
+
+
+if __name__ == "__main__":
+    main()

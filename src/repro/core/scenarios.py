@@ -1,0 +1,248 @@
+"""Chaos scenarios: named fault-plane configurations with measured
+degradation envelopes.
+
+Each scenario pairs a :class:`~repro.runtime.faults.FaultPlane` recipe with
+the fleet pipeline (``launch.edge_cloud.build_fleet_pipeline``) under the
+edge-cloud-integrated deployment and an open-loop query load, and measures
+how the system *degrades* — RMSE ratio vs the fault-free run, answer-latency
+tail, worst served staleness, fraction of answers from the batch-model
+fallback — instead of assuming it degrades gracefully:
+
+* ``fault_free``          — an empty fault plane; must be parity with the
+  plain (no-plane) run: identical forecasts, identical dispatch counts.
+* ``site_crash``          — the cloud (speed training) crashes mid-window-2
+  with in-flight work lost, restarts cold at window 3.5; staleness grows
+  until training resumes.
+* ``partitioned_sync``    — the edge<->cloud WAN partitions for ~2 windows
+  (deliveries queue until heal): model sync is delayed past the staleness
+  bound, the watchdog must flip serving to the batch fallback.
+* ``sensor_chaos``        — windows drop, duplicate, arrive late; records
+  drop inside windows; flush timeouts + per-stream quarantine keep the
+  fleet's aggregated dispatch moving.
+* ``corrupted_int8_sync`` — int8 model sync with bit-flip corruption on half
+  the model publishes: every corrupt publish must be checksum-detected and
+  never served; re-requests recover clean copies.
+* ``compound_drift``      — no injected faults, adversarial *data*: the
+  fleet mixes gradual, abrupt, and stationary streams per stream.
+
+All runs use ``CHAOS_STAGE_COSTS`` — fixed virtual stage walls instead of
+perf-counter measurements — so the same fault seed reproduces the run
+byte-for-byte (bus log, ledger, forecasts): determinism is an asserted
+property, not an aspiration (see ``schedule_signature``/``bus_signature``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.runtime.faults import (
+    FaultPlane,
+    MessageFault,
+    PartitionFault,
+    SensorFault,
+    SiteFault,
+)
+
+# fixed virtual wall-seconds per module: deterministic stand-ins for the
+# measured stage walls, sized to the fast-mode steady-state measurements
+# (training dominates; serving ticks are cheap).  Both the chaos runs AND
+# the fault-free baseline use these, so RMSE parity is exact.
+CHAOS_STAGE_COSTS: Dict[str, float] = {
+    "batch_inference": 0.05,
+    "speed_inference": 0.05,
+    "hybrid_inference": 0.01,
+    "speed_training": 0.5,
+    "model_sync": 0.01,
+    "data_sync": 0.005,
+    "serving": 0.02,
+}
+
+SCENARIOS = ("fault_free", "site_crash", "partitioned_sync", "sensor_chaos",
+             "corrupted_int8_sync", "compound_drift")
+
+# per-scenario degradation envelope: max hybrid-RMSE ratio vs the fault-free
+# run.  fault_free is exact parity; partition/crash must stay within the
+# paper-claim bound (the watchdog serving the batch model is itself a model,
+# not garbage); sensor and compound chaos change the *data*, so their
+# envelopes are looser.
+RMSE_RATIO_MAX: Dict[str, float] = {
+    "fault_free": 1.0 + 1e-9,
+    "site_crash": 1.5,
+    "partitioned_sync": 1.5,
+    "sensor_chaos": 2.0,
+    "corrupted_int8_sync": 1.5,
+    "compound_drift": 3.0,
+}
+
+
+def scenario_plane(name: str, seed: int, period_s: float) -> FaultPlane:
+    """Build the named scenario's seeded fault plane.  Times are in units
+    of the window period so the faults land mid-pipeline at any period."""
+    p = period_s
+    if name == "fault_free" or name == "compound_drift":
+        return FaultPlane(seed)
+    if name == "site_crash":
+        # down during window 2's training, cold restart mid-window 3
+        return FaultPlane(seed, site_faults=[
+            SiteFault("cloud", t_down=2.02 * p, t_up=3.5 * p)])
+    if name == "partitioned_sync":
+        return FaultPlane(seed, partitions=[
+            PartitionFault("edge", "cloud", t_start=1.2 * p, t_heal=3.4 * p,
+                           mode="queue")])
+    if name == "sensor_chaos":
+        return FaultPlane(seed, sensor_faults=[
+            SensorFault(p_drop_window=0.15, p_dup_window=0.15, p_reorder=0.3,
+                        reorder_jitter_s=0.3 * p, p_drop_record=0.1)])
+    if name == "corrupted_int8_sync":
+        return FaultPlane(seed, message_faults=[
+            MessageFault("model/latest/*", "corrupt", p=0.5)])
+    raise ValueError(f"unknown scenario {name!r}; pick from {SCENARIOS}")
+
+
+def scenario_quantized(name: str) -> bool:
+    """Only the corruption scenario forces int8 sync (bit flips in a
+    quantized tree are its whole point); the rest inherit the harness
+    default."""
+    return name == "corrupted_int8_sync"
+
+
+# -- determinism signatures ---------------------------------------------------
+
+
+def bus_signature(res) -> List[Tuple]:
+    """The bus log reduced to its schedule: (topic, src, bytes, publish,
+    deliver) per message, exact floats — two runs under one fault seed must
+    match entry for entry."""
+    return [(m.topic, m.src, float(m.nbytes), m.publish_time, m.deliver_time)
+            for m in res.message_log]
+
+
+def ledger_signature(res) -> Dict[str, Dict[str, float]]:
+    return res.ledger.table()
+
+
+def forecast_signature(res) -> List[Tuple]:
+    """Per-stream window forecasts (+ served query answers), excluding the
+    measured host walls (t_*) which are not part of the deterministic
+    contract."""
+    sig: List[Tuple] = []
+    for sid in sorted(res.results):
+        for r in res.results[sid].records:
+            sig.append((sid, r.window, r.rmse_batch, r.rmse_speed,
+                        r.rmse_hybrid, r.w_speed))
+    for q in res.queries:
+        sig.append((q.stream, q.uid, tuple(q.answer), q.model_window,
+                    q.context_window, q.served_fallback))
+    return sig
+
+
+class ChaosHarness:
+    """Build the fleet pipeline once, run it under any scenario's fault
+    plane.
+
+    The pretrained batch model and stage set are shared across scenarios
+    (stream *history* is drift-independent by construction —
+    ``fleet_windowed_streams`` starts drift where the live stream starts —
+    so one pretrain serves every stream-scenario mix, including
+    ``compound_drift``'s per-stream gradual/abrupt/none cycle)."""
+
+    def __init__(self, *, n_streams: int = 3, n_windows: int = 6,
+                 records_per_window: int = 120, period_s: float = 5.0,
+                 qps: float = 8.0, serve_slots: int = 4,
+                 staleness_bound: int = 1, base_scenario: str = "gradual",
+                 verbose: bool = False):
+        from repro.launch.edge_cloud import build_fleet_pipeline
+
+        self.n_streams = n_streams
+        self.n_windows = n_windows
+        self.rpw = records_per_window
+        self.period = period_s
+        self.qps = qps
+        self.serve_slots = serve_slots
+        self.staleness_bound = staleness_bound
+        self.base_scenario = base_scenario
+        self.stages, self.bp, self._base_streams, self.cost = \
+            build_fleet_pipeline(n_streams, n_windows, fast=True,
+                                 records_per_window=records_per_window,
+                                 scenario=base_scenario, verbose=verbose)
+        self._compound_streams = None
+
+    def streams_for(self, name: str):
+        if name != "compound_drift":
+            return self._base_streams
+        if self._compound_streams is None:
+            from repro.streams.sources import fleet_windowed_streams
+
+            cycle = ["gradual", "abrupt", "none"]
+            scenarios = [cycle[i % 3] for i in range(self.n_streams)]
+            self._compound_streams, _ = fleet_windowed_streams(
+                self.n_streams, self.n_windows, self.rpw, scenarios,
+                alphas=np.full(5, 1.5e-3))
+        return self._compound_streams
+
+    def executor(self, fault_plane: Optional[FaultPlane],
+                 quantized: bool = False):
+        from repro.runtime import FleetBusExecutor, paper_topology
+        from repro.runtime.deployment import edge_cloud_integrated
+
+        return FleetBusExecutor(
+            self.stages, edge_cloud_integrated(), paper_topology(),
+            self.cost, window_period_s=self.period, qps=self.qps,
+            serve_slots=self.serve_slots, quantized_sync=quantized,
+            fault_plane=fault_plane, stage_costs=dict(CHAOS_STAGE_COSTS),
+            staleness_bound=self.staleness_bound)
+
+    def run_plain(self):
+        """The non-chaos reference path: no fault plane at all (the bus
+        publish fast path, no flush timers) but the same deterministic
+        stage costs — what ``fault_free`` must be parity with."""
+        import jax
+
+        ex = self.executor(None)
+        return ex.run(self._base_streams, self.bp, jax.random.PRNGKey(1))
+
+    def run_scenario(self, name: str, seed: int = 0
+                     ) -> Tuple[Dict[str, Any], Any]:
+        """Run one scenario; returns (envelope, FleetBusRunResult).  Any
+        exception is itself a failed envelope (``unhandled_exception``) —
+        chaos must degrade the numbers, never crash the runtime."""
+        import jax
+
+        plane = scenario_plane(name, seed, self.period)
+        ex = self.executor(plane, quantized=scenario_quantized(name))
+        try:
+            res = ex.run(self.streams_for(name), self.bp,
+                         jax.random.PRNGKey(1))
+        except Exception as e:  # noqa: BLE001 - the envelope records it
+            return {"scenario": name, "seed": seed,
+                    "unhandled_exception": f"{type(e).__name__}: {e}"}, None
+        env = self.envelope(name, seed, res)
+        return env, res
+
+    def envelope(self, name: str, seed: int, res) -> Dict[str, Any]:
+        s = res.serving or {}
+        env = {
+            "scenario": name,
+            "seed": seed,
+            "unhandled_exception": None,
+            "rmse_hybrid": res.mean_rmse()["hybrid"],
+            "n_windows_scored": sum(len(r.records)
+                                    for r in res.results.values()),
+            "train_dispatches": res.train_dispatches,
+            "n_answered": s.get("n_answered", 0),
+            "n_starved": s.get("n_starved", 0),
+            "p99_latency_s": s.get("p99_s", float("inf")),
+            "max_staleness": s.get("max_staleness", 0),
+            "fallback_frac": s.get("fallback_frac", 0.0),
+            "capacity_failures": len(res.failures),
+            "dead_letters": len(res.dead_letters),
+        }
+        if res.chaos is not None:
+            env["fault_stats"] = res.chaos["fault_stats"]
+            env["n_fault_events"] = res.chaos["n_fault_events"]
+            env["corrupt_rejected"] = res.chaos["corrupt_rejected"]
+            env["checksum_verified"] = res.chaos["checksum_verified"]
+            env["resync_requests"] = res.chaos["resync_requests"]
+            env["quarantined"] = res.chaos["quarantined"]
+        return env

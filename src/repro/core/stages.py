@@ -202,12 +202,32 @@ class ModelSync(Stage):
     """Install a freshly-published speed model (plus its Algorithm-1 eval
     predictions) as the serving state.  Pure pass-through compute; the cost of
     this module is the model transfer, which the executor accounts as
-    communication."""
+    communication.
+
+    When the publish carries a ``checksum`` (CRC32 over the param tree,
+    stamped by the training site), the stage verifies it on deliver before
+    installing anything: a mismatch — e.g. a bit-flipped int8 ``QTensor``
+    in transit — returns ``ok=False`` with no state update, increments
+    ``corrupt_rejected``, and leaves re-request to the executor.  A corrupt
+    model must *never* be served."""
 
     name = "model_sync"
 
-    def compute(self, *, params: Params, eval_preds, eval_y) -> Dict[str, Any]:
-        return {"speed_params": params, "prev_preds": eval_preds,
+    def __init__(self):
+        self.verified = 0
+        self.corrupt_rejected = 0
+
+    def compute(self, *, params: Params, eval_preds, eval_y,
+                checksum: Optional[int] = None) -> Dict[str, Any]:
+        if checksum is not None:
+            from repro.runtime.faults import tree_checksum
+
+            if tree_checksum(params) != checksum:
+                self.corrupt_rejected += 1
+                return {"ok": False, "speed_params": None,
+                        "prev_preds": None, "prev_y": None}
+            self.verified += 1
+        return {"ok": True, "speed_params": params, "prev_preds": eval_preds,
                 "prev_y": eval_y}
 
 

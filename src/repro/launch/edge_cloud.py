@@ -84,11 +84,15 @@ def build_real_pipeline(n_windows: int, fast: bool = True,
 
 def build_fleet_pipeline(n_streams: int, n_windows: int, fast: bool = True,
                          mode="dynamic", records_per_window: int = 250,
-                         scenario: str = "gradual", verbose: bool = False):
+                         scenario="gradual", verbose: bool = False):
     """The fleet analog of :func:`build_real_pipeline`: N correlated
     turbines (``streams.sources.turbine_fleet``), each scaled by its own
     history, all served by one shared pre-trained batch model; returns
-    (fleet_stages, batch_params, {stream_id: WindowedStream}, cost)."""
+    (fleet_stages, batch_params, {stream_id: WindowedStream}, cost).
+
+    ``scenario`` is one drift scenario name for the whole fleet or a
+    per-stream list ({"none", "gradual", "abrupt"} each) — the chaos
+    suite's ``compound_drift`` mixes all three across one fleet."""
     import jax
     import numpy as np
 
@@ -105,7 +109,9 @@ def build_fleet_pipeline(n_streams: int, n_windows: int, fast: bool = True,
     batch_epochs, speed_epochs = (8, 10) if fast else (50, 100)
     rpw = records_per_window
     cfg = get_config("lstm-paper")
-    alphas = np.full(5, 1.5e-3) if scenario == "gradual" else None
+    has_gradual = ("gradual" in scenario if not isinstance(scenario, str)
+                   else scenario == "gradual")
+    alphas = np.full(5, 1.5e-3) if has_gradual else None
     streams, hist0 = fleet_windowed_streams(
         n_streams, n_windows, rpw, scenario, alphas=alphas)
 
@@ -294,6 +300,47 @@ def run_calibrated(args) -> None:
                   f"(first: {res.failures[0]})")
 
 
+def run_chaos(args) -> None:
+    """One chaos scenario end to end: the fleet pipeline under the named
+    fault plane, degradation envelope printed (see ``core.scenarios``)."""
+    from repro.core.scenarios import ChaosHarness
+
+    # chaos-friendly defaults where the generic flags were left untouched:
+    # small fleet, short run, fast virtual period, live query load.
+    n_streams = args.streams if args.streams > 1 else 3
+    n_windows = args.windows if args.windows != 25 else 6
+    period = args.period if args.period != 30.0 else 5.0
+    qps = args.qps if args.qps > 0 else 8.0
+
+    h = ChaosHarness(n_streams=n_streams, n_windows=n_windows,
+                     records_per_window=120, period_s=period, qps=qps,
+                     serve_slots=args.slots, verbose=True)
+    print(f"\n[chaos:{args.chaos}] {n_streams} streams x {n_windows} "
+          f"windows, period {period}s, {qps} qps")
+    env, res = h.run_scenario(args.chaos, seed=0)
+    if env["unhandled_exception"] is not None:
+        raise SystemExit(f"chaos run crashed: {env['unhandled_exception']}")
+    if args.chaos != "fault_free":
+        env_ff, _ = h.run_scenario("fault_free", seed=0)
+        ratio = env["rmse_hybrid"] / env_ff["rmse_hybrid"]
+        print(f"  hybrid RMSE {env['rmse_hybrid']:.4f} "
+              f"(x{ratio:.3f} vs fault-free)")
+    else:
+        print(f"  hybrid RMSE {env['rmse_hybrid']:.4f}")
+    print(f"  answered {env['n_answered']} queries "
+          f"(starved {env['n_starved']}), p99 {env['p99_latency_s']*1e3:.1f}"
+          f"ms, max served staleness {env['max_staleness']}, "
+          f"fallback {env['fallback_frac']:.2f}")
+    print(f"  dead letters {env['dead_letters']}, quarantined "
+          f"{env.get('quarantined', {})}, corrupt rejected "
+          f"{env.get('corrupt_rejected', 0)}, resync requests "
+          f"{env.get('resync_requests', 0)}")
+    stats = env.get("fault_stats", {})
+    if stats:
+        print("  fault events: " + ", ".join(
+            f"{k}={v}" for k, v in sorted(stats.items())))
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--deployment",
@@ -341,8 +388,24 @@ def main() -> None:
     p.add_argument("--slots", type=int, default=4,
                    help="request plane: fixed batch slots in the "
                         "slot-recycling continuous batcher")
+    p.add_argument("--chaos", default=None,
+                   help="run one chaos scenario from core.scenarios "
+                        "(fault_free, site_crash, partitioned_sync, "
+                        "sensor_chaos, corrupted_int8_sync, compound_drift) "
+                        "against the fleet under a seeded fault plane and "
+                        "print its degradation envelope; honours --streams/"
+                        "--windows/--period/--qps/--slots, with chaos-sized "
+                        "defaults otherwise")
     args = p.parse_args()
 
+    if args.chaos is not None:
+        from repro.core.scenarios import SCENARIOS
+
+        if args.chaos not in SCENARIOS:
+            p.error(f"--chaos {args.chaos!r}: pick from "
+                    f"{', '.join(SCENARIOS)}")
+        run_chaos(args)
+        return
     if args.streams > 1 and not args.real:
         p.error("--streams > 1 requires --real (the fleet executors run "
                 "real compute)")

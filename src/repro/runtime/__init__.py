@@ -1,5 +1,6 @@
 from repro.runtime.bus import (  # noqa: F401
     CapacityError,
+    DeadLetter,
     EventKernel,
     Link,
     Message,
@@ -7,6 +8,15 @@ from repro.runtime.bus import (  # noqa: F401
     TopicBus,
     Topology,
     paper_topology,
+)
+from repro.runtime.faults import (  # noqa: F401
+    FaultPlane,
+    MessageFault,
+    PartitionFault,
+    SensorFault,
+    SiteFault,
+    corrupt_tree,
+    tree_checksum,
 )
 from repro.runtime.deployment import (  # noqa: F401
     ALL_DEPLOYMENTS,

@@ -93,6 +93,19 @@ class Message:
     deliver_time: float = 0.0
 
 
+@dataclass
+class DeadLetter:
+    """A publish that could not be delivered: no link between the sites, or
+    a hard (drop-mode) partition in between.  Recorded instead of raising,
+    so a partitioned topology is a scenario, not a crash."""
+
+    topic: str
+    src: str
+    dst: str
+    t: float
+    reason: str
+
+
 class EventKernel:
     def __init__(self) -> None:
         self._q: List[Tuple[float, int, Callable[[], None]]] = []
@@ -107,10 +120,12 @@ class EventKernel:
 
     def run(self, until: Optional[float] = None) -> float:
         while self._q:
-            t, _, fn = heapq.heappop(self._q)
-            if until is not None and t > until:
-                heapq.heappush(self._q, (t, next(self._seq), fn))
+            if until is not None and self._q[0][0] > until:
+                # peek, don't pop: re-pushing with a fresh sequence number
+                # would silently reorder same-timestamp events across a
+                # pause/resume — the chaos suite relies on exact replay
                 break
+            t, _, fn = heapq.heappop(self._q)
             self.now = max(self.now, t)
             fn()
         return self.now
@@ -124,13 +139,26 @@ class TopicBus:
     publish one level below ``stream/window`` — how a fleet executor
     subscribes one handler to all of its per-stream topics
     (``stream/window/t00``, ``stream/window/t01``, ...) under one
-    ``Deployment``."""
+    ``Deployment``.
 
-    def __init__(self, kernel: EventKernel, topo: Topology):
+    A publish to a site with no link from the source is not an error: it is
+    dropped and recorded in ``dead_letters`` (topic/src/dst/reason), so a
+    partitioned topology degrades instead of crashing.
+
+    An optional ``fault_plane`` (:class:`repro.runtime.faults.FaultPlane`)
+    interposes on every per-subscriber delivery: it can drop, delay,
+    duplicate, reorder or corrupt the delivery, queue it behind a WAN
+    partition, or lose it to a crashed site.  With no plane attached the
+    publish path is byte-identical to the pre-fault code."""
+
+    def __init__(self, kernel: EventKernel, topo: Topology,
+                 fault_plane: Optional[Any] = None):
         self.kernel = kernel
         self.topo = topo
+        self.fault_plane = fault_plane
         self._subs: Dict[str, List[Tuple[str, Callable[[Message], None]]]] = {}
         self.log: List[Message] = []
+        self.dead_letters: List[DeadLetter] = []
 
     def subscribe(self, topic: str, site: str, fn: Callable[[Message], None]):
         self._subs.setdefault(topic, []).append((site, fn))
@@ -144,10 +172,41 @@ class TopicBus:
 
     def publish(self, topic: str, payload: Any, nbytes: float, src: str) -> None:
         msg_t = self.kernel.now
+        fp = self.fault_plane
         for site, fn in self._matches(topic):
-            link = self.topo.link(src, site)
+            try:
+                link = self.topo.link(src, site)
+            except KeyError:
+                self.dead_letters.append(
+                    DeadLetter(topic=topic, src=src, dst=site, t=msg_t,
+                               reason="no-link"))
+                continue
             dt = link.transfer_time(nbytes)
-            msg = Message(topic=topic, payload=payload, nbytes=nbytes, src=src,
-                          publish_time=msg_t, deliver_time=msg_t + dt)
-            self.log.append(msg)
-            self.kernel.at(msg_t + dt, lambda fn=fn, msg=msg: fn(msg))
+            if fp is None:
+                msg = Message(topic=topic, payload=payload, nbytes=nbytes,
+                              src=src, publish_time=msg_t,
+                              deliver_time=msg_t + dt)
+                self.log.append(msg)
+                self.kernel.at(msg_t + dt, lambda fn=fn, msg=msg: fn(msg))
+                continue
+            for t_del, pl in fp.plan_deliveries(topic, payload, src, site,
+                                                msg_t, dt, self):
+                msg = Message(topic=topic, payload=pl, nbytes=nbytes, src=src,
+                              publish_time=msg_t, deliver_time=t_del)
+                self.log.append(msg)
+                self.kernel.at(
+                    t_del,
+                    lambda fn=fn, msg=msg, site=site:
+                        self._deliver(fn, msg, site))
+
+    def _deliver(self, fn: Callable[[Message], None], msg: Message,
+                 site: str) -> None:
+        """Fault-aware delivery: a message addressed to a site that is down
+        *at delivery time* is lost (the site may have crashed after the
+        publish was already in flight)."""
+        fp = self.fault_plane
+        if fp is not None and fp.site_down(site, self.kernel.now):
+            fp.note("lost_delivery_site_down", self.kernel.now,
+                    f"{msg.topic}->{site}")
+            return
+        fn(msg)

@@ -79,6 +79,7 @@ from repro.runtime.modules import (
     T_MODEL,
     T_REQUEST,
     T_RESPONSE,
+    T_RESYNC,
     T_SPEED,
     T_STREAM,
     stream_topic,
@@ -247,7 +248,8 @@ class _BusRuntime:
 
     def _init_runtime(self) -> None:
         self.kernel = EventKernel()
-        self.bus = TopicBus(self.kernel, self.topo)
+        self.bus = TopicBus(self.kernel, self.topo,
+                            fault_plane=getattr(self, "fault_plane", None))
         self.ledger = LatencyLedger()
         self.failures: List[str] = []
         self._free: Dict[str, List[float]] = {}
@@ -292,8 +294,20 @@ class _BusRuntime:
                   done: Optional[Callable[[], None]] = None) -> None:
         """Account a stage that took ``wall_s`` real seconds: rescale to the
         site's hardware class, queue it behind earlier work on the site's
-        worker pool, and fire ``done`` at its virtual completion."""
+        worker pool, and fire ``done`` at its virtual completion.
+
+        An optional ``stage_costs`` map (module -> wall seconds) replaces
+        the measured wall with a fixed virtual cost — the chaos suite uses
+        it so two runs under the same fault seed produce *byte-identical*
+        ledgers and schedules (perf-counter walls would differ per run).
+
+        If the module's site is down (``fault_plane.site_down``) when the
+        stage would complete, the in-flight work is lost: no ledger entry,
+        no completion callback — a crash loses whatever was computing."""
         site = self._site(module)
+        sc = getattr(self, "stage_costs", None)
+        if sc is not None and module in sc:
+            wall_s = sc[module]
         scaled = wall_s / max(site.compute_scale, 1e-9)
         pool = self._free.setdefault(
             site.name, [self.kernel.now] * max(site.workers, 1))
@@ -303,6 +317,11 @@ class _BusRuntime:
         pool[i] = start + scaled
 
         def finish():
+            fp = getattr(self, "fault_plane", None)
+            if fp is not None and fp.site_down(site.name, self.kernel.now):
+                fp.note("lost_inflight_work", self.kernel.now,
+                        f"{module}@{site.name}")
+                return
             self.ledger.add(module, comp_s=scaled, comm_s=comm_s,
                             queue_s=queue_s)
             if done is not None:
@@ -474,15 +493,29 @@ class BusExecutor(_BusRuntime):
 
             params_pub = quantize_tree(out["params"],
                                        min_size=self.quant_min_size)
+        from repro.runtime.faults import tree_checksum
+
+        pub_checksum = tree_checksum(params_pub)
         self._schedule(
             "speed_training", out.wall_s, comm,
             lambda: self.bus.publish(
                 T_MODEL,
                 {"window": w, "params": params_pub,
-                 "eval_preds": out["eval_preds"], "eval_y": out["eval_y"]},
+                 "eval_preds": out["eval_preds"], "eval_y": out["eval_y"],
+                 "checksum": pub_checksum},
                 _nbytes(params_pub), self.dep.site_of("speed_training")))
 
     def _on_model_sync(self, msg: Message) -> None:
+        out = self.stages.model_sync(
+            params=msg.payload["params"], eval_preds=msg.payload["eval_preds"],
+            eval_y=msg.payload["eval_y"],
+            checksum=msg.payload.get("checksum"))
+        if not out["ok"]:
+            # corrupted in transit: the transfer happened, the model is
+            # never installed — serving stays on the previous/batch model
+            self.ledger.add("model_sync", comp_s=0.0,
+                            comm_s=msg.deliver_time - msg.publish_time)
+            return
         if msg.payload["window"] <= self._model.window:
             # out-of-order publish (overlapping trainings on a multi-worker
             # site): the transfer happened, but never install an older model
@@ -490,9 +523,6 @@ class BusExecutor(_BusRuntime):
             self.ledger.add("model_sync", comp_s=0.0,
                             comm_s=msg.deliver_time - msg.publish_time)
             return
-        out = self.stages.model_sync(
-            params=msg.payload["params"], eval_preds=msg.payload["eval_preds"],
-            eval_y=msg.payload["eval_y"])
         self._model = _ModelState(
             params=out["speed_params"], prev_preds=out["prev_preds"],
             prev_y=out["prev_y"], window=msg.payload["window"])
@@ -609,6 +639,11 @@ class FleetBusRunResult(FleetRunResult):
     # latency/QPS/dispatch stats
     queries: List[Any] = field(default_factory=list)
     serving: Optional[Dict[str, Any]] = None
+    # the fault plane's ledger (when a FaultPlane drove the run): realized
+    # fault counts, rejections, quarantines, re-requests — plus every
+    # undeliverable publish
+    dead_letters: List[Any] = field(default_factory=list)
+    chaos: Optional[Dict[str, Any]] = None
 
     def table3(self) -> Dict[str, Dict[str, float]]:
         return self.ledger.table()
@@ -763,7 +798,37 @@ class FleetBusExecutor(_BusRuntime):
     ``predict_fleet`` dispatch over the device-resident serving params —
     interleaved with the training windows under the serving site's worker
     occupancy, answers published on ``serve/response/<sid>``, per-request
-    latency and sustained QPS reported in ``FleetBusRunResult.serving``."""
+    latency and sustained QPS reported in ``FleetBusRunResult.serving``.
+
+    The robustness layer (exercised by ``core.scenarios`` under a
+    ``fault_plane``, but always on):
+
+    * **checksummed model sync** — every model publish carries a CRC32 of
+      its param tree; ``ModelSync`` verifies on deliver, a corrupt publish
+      (e.g. a bit-flipped int8 ``QTensor``) is never installed, and the
+      sync site re-requests it on ``model/rerequest/<sid>`` (the training
+      site re-publishes its cached last model, at most ``max_resync``
+      times per (stream, window)).
+    * **staleness watchdog** — serving falls back to the batch model for
+      any stream whose installed ``model_window`` lags the stream's
+      context window by more than ``staleness_bound`` (answers stamp
+      ``served_fallback``), so the PR-6 ≤1-window staleness bound is now
+      *enforced*, not just observed.
+    * **per-stream quarantine** — the aggregated one-dispatch-per-window
+      contract waits for every stream; under a fault plane each
+      aggregation arms an ``agg_timeout_s`` flush that dispatches the
+      streams that showed up, and a stream missing ``quarantine_after``
+      consecutive training windows is quarantined (dispatches stop
+      waiting for it) until its sensor delivers again — one poisoned
+      stream cannot stall the fleet.
+    * **crash semantics** — in-flight stage work on a site that is down at
+      completion time is lost; when the site restarts the plane fires
+      ``_on_site_restart`` (cold worker pool; serving state reset if the
+      sync site crashed).
+
+    ``stage_costs`` (module -> wall seconds) replaces measured stage walls
+    with fixed virtual costs so chaos runs are byte-identically replayable
+    under one fault seed."""
 
     def __init__(
         self,
@@ -782,6 +847,12 @@ class FleetBusExecutor(_BusRuntime):
         serve_slots: int = 4,
         query_trace: Optional[List[Any]] = None,
         query_seed: int = 0,
+        fault_plane: Optional[Any] = None,
+        stage_costs: Optional[Dict[str, float]] = None,
+        staleness_bound: int = 1,
+        agg_timeout_s: Optional[float] = None,
+        quarantine_after: int = 2,
+        max_resync: int = 3,
     ):
         self.stages = stages
         self.dep = deployment
@@ -797,6 +868,13 @@ class FleetBusExecutor(_BusRuntime):
         self.serve_slots = serve_slots
         self.query_trace = query_trace
         self.query_seed = query_seed
+        self.fault_plane = fault_plane
+        self.stage_costs = stage_costs
+        self.staleness_bound = staleness_bound
+        self.agg_timeout_s = (agg_timeout_s if agg_timeout_s is not None
+                              else 0.25 * window_period_s)
+        self.quarantine_after = quarantine_after
+        self.max_resync = max_resync
 
     @property
     def _single_stages(self) -> PipelineStages:
@@ -831,8 +909,15 @@ class FleetBusExecutor(_BusRuntime):
         self._records: Dict[Tuple[StreamId, int], WindowRecord] = {}
         self._train_walls: Dict[Tuple[StreamId, int], float] = {}
         self._pending: Dict[Tuple[StreamId, int], Dict[str, Message]] = {}
-        self._pending_train: Dict[int, Dict[StreamId, Message]] = {}
-        self._pending_infer: Dict[Tuple[str, int], Dict[StreamId, Message]] = {}
+        # per-stage aggregation: (kind, window) -> arrived stream messages;
+        # kind in {"batch", "speed", "train"}
+        self._pending_agg: Dict[Tuple[str, int], Dict[StreamId, Message]] = {}
+        self._dispatched: set = set()
+        self._flush_armed: set = set()
+        self._quarantined: Dict[StreamId, int] = {}
+        self._miss: Dict[StreamId, int] = {sid: 0 for sid in ids}
+        self._last_model_pub: Dict[StreamId, Tuple[Dict[str, Any], float]] = {}
+        self._resync_sent: Dict[Tuple[StreamId, int], int] = {}
         self._retrain_log: Dict[StreamId, List[bool]] = {
             sid: [] for sid in ids}
         self._inject_t: Dict[Tuple[StreamId, int], float] = {}
@@ -860,6 +945,9 @@ class FleetBusExecutor(_BusRuntime):
         sub(T_HYBRID, "archiving", self._on_archive)
         sub(T_HYBRID, "data_injection", self._on_user)
         sub(T_MODEL, "model_sync", self._on_model_sync)
+        # checksum-failure recovery: the sync site asks the training site to
+        # re-publish a corrupted model
+        sub(T_RESYNC, "speed_training", self._on_resync)
         if self._serving_enabled:
             # the request plane: stream windows feed the serving contexts,
             # request topics feed the admission queue, responses land back
@@ -872,73 +960,131 @@ class FleetBusExecutor(_BusRuntime):
 
     # -- handlers ------------------------------------------------------------
 
-    def _gather_infer(self, kind: str, msg: Message
-                      ) -> Optional[Dict[StreamId, Message]]:
-        """Collect the window's per-stream messages for one inference
-        stage; returns the full set once the last stream arrives (the same
-        aggregation contract the training handler uses), else None."""
+    def _gather(self, kind: str, msg: Message
+                ) -> Optional[Dict[StreamId, Message]]:
+        """Collect window ``w``'s per-stream messages for one aggregated
+        stage dispatch (``kind`` in batch/speed/train).  Returns the
+        complete set — every *non-quarantined* stream arrived — else None.
+
+        Under a fault plane, sensors lie: windows drop, duplicate, arrive
+        late.  So (a) a delivery from a quarantined stream revives it, (b) a
+        delivery for an already-dispatched (kind, window) is a late
+        straggler and is dropped, and (c) the first delivery arms a flush
+        timer (``agg_timeout_s``) so the fleet dispatches whoever showed up
+        instead of waiting forever (see :meth:`_flush`)."""
         sid, w = msg.payload["stream"], msg.payload["window"]
-        pend = self._pending_infer.setdefault((kind, w), {})
-        pend[sid] = msg
-        if len(pend) < len(self.ids):
+        fp = self.fault_plane
+        # the delivered window's y is ground truth for this (sid, w) from
+        # here on — under record dropout it is shorter than the pre-stored
+        # nominal y, and the preds must score against what actually arrived
+        self._ys[(sid, w)] = msg.payload["y"]
+        if sid in self._quarantined:
+            del self._quarantined[sid]
+            self._miss[sid] = 0
+            if fp is not None:
+                fp.note("quarantine_revived", self.kernel.now, sid)
+        key = (kind, w)
+        if key in self._dispatched:
+            if fp is not None:
+                fp.note("late_straggler_dropped", self.kernel.now,
+                        f"{kind}:{sid}/w{w}")
             return None
-        return self._pending_infer.pop((kind, w))
+        pend = self._pending_agg.setdefault(key, {})
+        pend[sid] = msg
+        self._miss[sid] = 0
+        expected = [s for s in self.ids if s not in self._quarantined]
+        if all(s in pend for s in expected):
+            self._dispatched.add(key)
+            return self._pending_agg.pop(key)
+        if fp is not None and key not in self._flush_armed:
+            self._flush_armed.add(key)
+            self.kernel.after(self.agg_timeout_s,
+                              lambda: self._flush(kind, w))
+        return None
+
+    def _flush(self, kind: str, w: int) -> None:
+        """Aggregation timeout: dispatch the streams whose window arrived.
+        Streams that missed ``quarantine_after`` consecutive *training*
+        flushes are quarantined — later aggregations stop waiting for them,
+        so one dead sensor cannot stall the fleet's one-dispatch window."""
+        key = (kind, w)
+        if key in self._dispatched:
+            return
+        self._dispatched.add(key)
+        pend = self._pending_agg.pop(key, {})
+        fp = self.fault_plane
+        if fp is not None:
+            fp.note("agg_flush", self.kernel.now,
+                    f"{kind}/w{w}:{len(pend)}/{len(self.ids)}")
+        if kind == "train":
+            for s in self.ids:
+                if s in pend or s in self._quarantined:
+                    continue
+                self._miss[s] += 1
+                if self._miss[s] >= self.quarantine_after:
+                    self._quarantined[s] = w
+                    if fp is not None:
+                        fp.note("stream_quarantined", self.kernel.now,
+                                f"{s}@w{w}")
+        if not pend:
+            return
+        if kind == "train":
+            self._dispatch_train(w, pend)
+        else:
+            self._dispatch_infer(kind, w, pend)
 
     def _on_batch(self, msg: Message) -> None:
         w = msg.payload["window"]
         if w < self.start_window:
             return
-        pend = self._gather_infer("batch", msg)
-        if pend is None:
-            return
-        # the whole fleet's window w is at the batch-inference site: one
-        # aggregated vmapped dispatch, per-stream results fan back out
-        comm = max(m.deliver_time - m.publish_time
-                   for m in pend.values()) + self.cost.ingest_s
-        out = self.stages.batch_inference(fleet={
-            sid: dict(batch_params=self._bp[sid], x=pend[sid].payload["x"])
-            for sid in self.ids})["fleet"]
-        wall = out[self.ids[0]].wall_s
-
-        def publish_preds():
-            for sid in self.ids:
-                o = out[sid]
-                self.bus.publish(
-                    stream_topic(T_BATCH, sid),
-                    {"stream": sid, "window": w, "kind": "batch",
-                     "pred": o["pred"], "wall_s": o.wall_s,
-                     "fallback": False},
-                    _nbytes(o["pred"]), self.dep.site_of("batch_inference"))
-
-        self._schedule("batch_inference", wall, comm, publish_preds)
+        pend = self._gather("batch", msg)
+        if pend is not None:
+            self._dispatch_infer("batch", w, pend)
 
     def _on_speed(self, msg: Message) -> None:
         w = msg.payload["window"]
         if w < self.start_window:
             return
-        pend = self._gather_infer("speed", msg)
-        if pend is None:
-            return
+        pend = self._gather("speed", msg)
+        if pend is not None:
+            self._dispatch_infer("speed", w, pend)
+
+    def _dispatch_infer(self, kind: str, w: int,
+                        pend: Dict[StreamId, Message]) -> None:
+        # the window's arrived streams are at the inference site: one
+        # aggregated vmapped dispatch, per-stream results fan back out
+        sids = [s for s in self.ids if s in pend]
         comm = max(m.deliver_time - m.publish_time
                    for m in pend.values()) + self.cost.ingest_s
-        out = self.stages.speed_inference(fleet={
-            sid: dict(speed_params=self._fleet.state(sid).speed_params,
-                      x=pend[sid].payload["x"],
-                      fallback_params=self._bp[sid])
-            for sid in self.ids})["fleet"]
-        wall = out[self.ids[0]].wall_s
+        if kind == "batch":
+            stage, topic, site = (self.stages.batch_inference, T_BATCH,
+                                  self.dep.site_of("batch_inference"))
+            out = stage(fleet={
+                sid: dict(batch_params=self._bp[sid],
+                          x=pend[sid].payload["x"])
+                for sid in sids})["fleet"]
+        else:
+            stage, topic, site = (self.stages.speed_inference, T_SPEED,
+                                  self.dep.site_of("speed_inference"))
+            out = stage(fleet={
+                sid: dict(speed_params=self._fleet.state(sid).speed_params,
+                          x=pend[sid].payload["x"],
+                          fallback_params=self._bp[sid])
+                for sid in sids})["fleet"]
+        wall = out[sids[0]].wall_s
+        module = "batch_inference" if kind == "batch" else "speed_inference"
 
         def publish_preds():
-            for sid in self.ids:
+            for sid in sids:
                 o = out[sid]
                 self.bus.publish(
-                    stream_topic(T_SPEED, sid),
-                    {"stream": sid, "window": w, "kind": "speed",
+                    stream_topic(topic, sid),
+                    {"stream": sid, "window": w, "kind": kind,
                      "pred": o["pred"], "wall_s": o.wall_s,
-                     "fallback": o["fallback"]},
-                    _nbytes(o["pred"]), self.dep.site_of("speed_inference"))
+                     "fallback": o.values.get("fallback", False)},
+                    _nbytes(o["pred"]), site)
 
-        self._schedule("speed_inference", wall, comm, publish_preds)
+        self._schedule(module, wall, comm, publish_preds)
 
     def _on_part(self, msg: Message) -> None:
         sid, w = msg.payload["stream"], msg.payload["window"]
@@ -981,18 +1127,21 @@ class FleetBusExecutor(_BusRuntime):
                 _nbytes(hc["pred"]), self.dep.site_of("hybrid_inference")))
 
     def _on_train(self, msg: Message) -> None:
-        sid, w = msg.payload["stream"], msg.payload["window"]
-        pend = self._pending_train.setdefault(w, {})
-        pend[sid] = msg
-        if len(pend) < len(self.ids):
-            return
-        # the whole fleet's window w has arrived at the training site: one
+        w = msg.payload["window"]
+        pend = self._gather("train", msg)
+        if pend is not None:
+            self._dispatch_train(w, pend)
+
+    def _dispatch_train(self, w: int, pend: Dict[StreamId, Message]) -> None:
+        # the window's arrived streams are at the training site: one
         # drift-gated, stream-count-bucketed fleet dispatch
         comm = max(m.deliver_time - m.publish_time for m in pend.values())
         if not self._train_fits_site(comm):
             return
         train_ids = []
         for s in self.ids:
+            if s not in pend:
+                continue
             fire = _gate_decision(
                 self.gate, s, pend[s].payload["y"],
                 must=self._fleet.state(s).speed_params is None)
@@ -1015,6 +1164,8 @@ class FleetBusExecutor(_BusRuntime):
                 self._records[(s, w)].t_speed_train = out["train_wall_s"]
 
         def publish_models():
+            from repro.runtime.faults import tree_checksum
+
             for s in train_ids:
                 o = out["fleet"][s]
                 params_pub = o["params"]
@@ -1028,33 +1179,84 @@ class FleetBusExecutor(_BusRuntime):
 
                     params_pub = quantize_tree(params_pub,
                                                min_size=self.quant_min_size)
-                self.bus.publish(
-                    stream_topic(T_MODEL, s),
-                    {"stream": s, "window": w, "params": params_pub,
-                     "eval_preds": o["eval_preds"], "eval_y": o["eval_y"]},
-                    _nbytes(params_pub), self.dep.site_of("speed_training"))
+                payload = {"stream": s, "window": w, "params": params_pub,
+                           "eval_preds": o["eval_preds"],
+                           "eval_y": o["eval_y"],
+                           "checksum": tree_checksum(params_pub)}
+                nbytes = _nbytes(params_pub)
+                # keep the last publish so a corruption-triggered re-request
+                # can re-send without retraining
+                self._last_model_pub[s] = (payload, nbytes)
+                self.bus.publish(stream_topic(T_MODEL, s), payload, nbytes,
+                                 self.dep.site_of("speed_training"))
 
         self._schedule("speed_training", out.wall_s, comm, publish_models)
 
     def _on_model_sync(self, msg: Message) -> None:
         sid = msg.payload["stream"]
         state = self._fleet.state(sid)
+        # verify BEFORE the ordering guard: every corrupted delivery is
+        # detected and counted, whether or not it would have installed
+        out = self.stages.single.model_sync(
+            params=msg.payload["params"],
+            eval_preds=msg.payload["eval_preds"],
+            eval_y=msg.payload["eval_y"],
+            checksum=msg.payload.get("checksum"))
+        if not out["ok"]:
+            # checksum mismatch — the transfer happened but a corrupt model
+            # is never served; ask the training site to re-send
+            self.ledger.add("model_sync", comp_s=0.0,
+                            comm_s=msg.deliver_time - msg.publish_time)
+            self._request_resync(sid, msg.payload["window"])
+            return
         if msg.payload["window"] <= state.window:
             # never install an older model over a newer one (out-of-order
             # publishes on a multi-worker training site)
             self.ledger.add("model_sync", comp_s=0.0,
                             comm_s=msg.deliver_time - msg.publish_time)
             return
-        out = self.stages.single.model_sync(
-            params=msg.payload["params"],
-            eval_preds=msg.payload["eval_preds"],
-            eval_y=msg.payload["eval_y"])
         state.speed_params = out["speed_params"]
         state.prev_preds = out["prev_preds"]
         state.prev_y = out["prev_y"]
         state.window = msg.payload["window"]
         self._schedule("model_sync", out.wall_s,
                        msg.deliver_time - msg.publish_time)
+
+    def _request_resync(self, sid: StreamId, w: int) -> None:
+        sent = self._resync_sent.get((sid, w), 0)
+        if sent >= self.max_resync:
+            if self.fault_plane is not None:
+                self.fault_plane.note("resync_gave_up", self.kernel.now,
+                                      f"{sid}/w{w}")
+            return
+        self._resync_sent[(sid, w)] = sent + 1
+        self.bus.publish(stream_topic(T_RESYNC, sid),
+                         {"stream": sid, "window": w}, 64.0,
+                         self.dep.site_of("model_sync"))
+
+    def _on_resync(self, msg: Message) -> None:
+        cached = self._last_model_pub.get(msg.payload["stream"])
+        if cached is None:
+            return
+        payload, nbytes = cached
+        if payload["window"] < msg.payload["window"]:
+            return
+        self.bus.publish(stream_topic(T_MODEL, payload["stream"]), payload,
+                         nbytes, self.dep.site_of("speed_training"))
+
+    def _on_site_restart(self, site_name: str) -> None:
+        """Cold restart after a crash: the worker pool forgets its queue (a
+        restarted box has no backlog), and if the model-sync module lived
+        there its installed serving state is gone — every stream falls back
+        to the batch model until the next sync lands."""
+        self._free.pop(site_name, None)
+        if self.dep.site_of("model_sync") == site_name:
+            for sid in self.ids:
+                st = self._fleet.state(sid)
+                st.speed_params = None
+                st.prev_preds = None
+                st.prev_y = None
+                st.window = -1
 
     def _on_user(self, msg: Message) -> None:
         sid, w = msg.payload["stream"], msg.payload["window"]
@@ -1078,21 +1280,39 @@ class FleetBusExecutor(_BusRuntime):
                 self._bp[sid], min_size=self.quant_min_size)
         return p
 
-    def _serving_params(self) -> Tuple[List[Params], Dict[StreamId, int]]:
+    def _serving_params(self) -> Tuple[List[Params], Dict[StreamId, int],
+                                       Dict[StreamId, bool]]:
         """The device-resident serving set, read in fleet order with zero
         host round-trip: each stream's installed speed model (a lazy
         ``FleetParamView`` handle into the stacked fit output under float
         sync, an int8 ``QTensor`` tree under quantized sync) or its batch
         fallback, plus the training window each model came from — the
-        staleness stamp every answer carries."""
+        staleness stamp every answer carries.
+
+        The staleness watchdog enforces the bound the request plane used to
+        merely observe: a stream whose installed model lags its freshest
+        context window by more than ``staleness_bound`` training windows
+        (sync delayed by a partition, publishes dropped, training site
+        down) serves the batch-model fallback instead of an ever-staler
+        speed model.  The returned fallback map stamps the answers."""
         params: List[Params] = []
         windows: Dict[StreamId, int] = {}
+        fallback: Dict[StreamId, bool] = {}
         for sid in self.ids:
             st = self._fleet.state(sid)
-            params.append(st.speed_params if st.speed_params is not None
-                          else self._serving_fallback(sid))
+            ctxw = self._qplane.context_window(sid)
+            stale = (st.window >= 0
+                     and ctxw - st.window > self.staleness_bound)
+            use_fb = st.speed_params is None or stale
+            if stale and self.fault_plane is not None:
+                self.fault_plane.note(
+                    "staleness_fallback", self.kernel.now,
+                    f"{sid}:ctx w{ctxw} vs model w{st.window}")
+            params.append(self._serving_fallback(sid) if use_fb
+                          else st.speed_params)
             windows[sid] = st.window
-        return params, windows
+            fallback[sid] = use_fb
+        return params, windows, fallback
 
     def _on_serve_ctx(self, msg: Message) -> None:
         self._qplane.observe_window(
@@ -1123,9 +1343,10 @@ class FleetBusExecutor(_BusRuntime):
             return
         by_stream, xs = batch
         self._tick_pending = True
-        params_seq, model_windows = self._serving_params()
+        params_seq, model_windows, fallback = self._serving_params()
         out = self.stages.serving(params_seq=params_seq, xs=xs)
-        plane.apply(by_stream, out["preds"], model_windows)
+        plane.apply(by_stream, out["preds"], model_windows,
+                    fallback=fallback)
         serve_site = self._serving_site_name()
 
         def finish():
@@ -1195,12 +1416,22 @@ class FleetBusExecutor(_BusRuntime):
         from repro.streams.injection import BusInjector
 
         ids = list(streams)
+        fp = self.fault_plane
+        if fp is not None:
+            # rewind the plane so repeated runs under one seed replay the
+            # identical fault schedule, then wire it into the run
+            fp.reset()
+            fp.on_restart(self._on_site_restart)
         self._reset(ids)
+        if fp is not None:
+            fp.install(self.kernel)
         n = min(len(s) for s in streams.values())
         if n_windows is not None:
             n = min(n, n_windows)
         self._bp = resolve_fleet_params(batch_params, ids)
         self._keys = fleet_key_chains(key, ids, n)
+        ms = self.stages.single.model_sync
+        rejected0, verified0 = ms.corrupt_rejected, ms.verified
         self._warmup(streams)
         trace: List[Any] = []
         if self._serving_enabled:
@@ -1228,7 +1459,8 @@ class FleetBusExecutor(_BusRuntime):
         for sid in ids:
             injector = BusInjector(self.kernel, self.bus, T_STREAM,
                                    self.dep.site_of("data_injection"),
-                                   period_s=self.period, stream_id=sid)
+                                   period_s=self.period, stream_id=sid,
+                                   fault_plane=fp)
             for w in range(n):
                 data = streams[sid].supervised(w)
                 self._ys[(sid, w)] = data["y"]
@@ -1252,6 +1484,9 @@ class FleetBusExecutor(_BusRuntime):
                 sustained = 0.0
             ticks = srv.ticks - ticks0
             sdisp = srv.dispatches - sdisp0
+            staleness = [q.context_window - q.model_window for q in answered
+                         if not q.served_fallback and q.model_window >= 0
+                         and q.context_window >= 0]
             serving_stats = {
                 "n_requests": len(trace),
                 "n_answered": len(answered),
@@ -1263,6 +1498,13 @@ class FleetBusExecutor(_BusRuntime):
                 "offered_qps": offered,
                 "sustained_qps": sustained,
                 "slots": self.serve_slots,
+                # the watchdog's envelope: how often serving fell back to
+                # the batch model, and the worst model lag actually served
+                # from a speed model (fallback answers excluded — they are
+                # the bound *working*)
+                "fallback_frac": (sum(q.served_fallback for q in answered)
+                                  / len(answered) if answered else 0.0),
+                "max_staleness": max(staleness, default=0),
                 **latency_stats([lat[q.uid] for q in answered]),
             }
 
@@ -1272,6 +1514,17 @@ class FleetBusExecutor(_BusRuntime):
                     for (s, w) in sorted(self._records) if s == sid]
             results[sid] = HybridRunResult(records=recs,
                                            mode=str(self.stages.mode))
+        chaos = None
+        if fp is not None:
+            chaos = {
+                "fault_stats": dict(fp.stats),
+                "n_fault_events": len(fp.events),
+                "dead_letters": len(self.bus.dead_letters),
+                "quarantined": dict(self._quarantined),
+                "corrupt_rejected": ms.corrupt_rejected - rejected0,
+                "checksum_verified": ms.verified - verified0,
+                "resync_requests": sum(self._resync_sent.values()),
+            }
         return FleetBusRunResult(
             results=results,
             train_dispatches=fc.train_dispatches - dispatches0,
@@ -1286,4 +1539,6 @@ class FleetBusExecutor(_BusRuntime):
             message_log=self.bus.log,
             queries=list(self.queries),
             serving=serving_stats,
+            dead_letters=list(self.bus.dead_letters),
+            chaos=chaos,
         )

@@ -1,0 +1,346 @@
+"""The fault plane: seeded, deterministic fault injection for the bus runtime.
+
+A :class:`FaultPlane` interposes on the deterministic runtime at three
+seams, so every robustness claim can be *exercised* instead of assumed:
+
+* **message faults** (``TopicBus.publish`` per-subscriber delivery):
+  drop, delay, duplicate, reorder (seeded delivery jitter) and payload
+  corruption — including bit-flipped int8 ``QTensor`` model publishes —
+  selected by fnmatch topic patterns over an active time window.
+* **site faults** (``EventKernel`` scheduling + delivery): a site is down
+  over ``[t_down, t_up)`` — publishes from it are lost, deliveries to it
+  are lost, and in-flight stage work that would finish while it is down is
+  lost (the executors check :meth:`site_down` at stage completion).  At
+  ``t_up`` the plane fires registered restart hooks so executors can model
+  a cold restart (reset worker pools, drop cached serving state).
+* **WAN partition/heal** between two sites: deliveries crossing the cut are
+  either queued until ``t_heal`` (delayed model sync) or dead-lettered.
+* **sensor faults** (``streams.injection.BusInjector``): whole-window
+  dropout, duplicate windows, out-of-order (jittered) windows and
+  per-record dropout, applied before the window ever reaches the bus.
+
+Determinism: all probabilistic draws come from RNGs derived from
+``(seed, category, spec index[, stream, window])``, so the same seed and
+scenario reproduce the identical fault schedule — byte-identical bus logs,
+ledgers and forecasts — while different seeds produce different schedules.
+``reset()`` rewinds the sequential per-spec RNGs so one plane can drive
+repeated runs reproducibly.
+
+Every fault action is recorded in ``events`` (time, kind, detail) — the
+fault schedule — and tallied in ``stats``.
+"""
+from __future__ import annotations
+
+import zlib
+from collections import Counter
+from dataclasses import dataclass, field
+from fnmatch import fnmatchcase
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+INF = float("inf")
+
+MESSAGE_FAULT_KINDS = ("drop", "delay", "duplicate", "reorder", "corrupt")
+
+
+@dataclass(frozen=True)
+class MessageFault:
+    """One message-level fault rule: applies ``kind`` with probability
+    ``p`` to every delivery whose topic matches ``topic`` (fnmatch pattern,
+    e.g. ``"model/latest/*"``) published in ``[start, end)``."""
+
+    topic: str
+    kind: str  # drop | delay | duplicate | reorder | corrupt
+    p: float = 1.0
+    delay_s: float = 0.0  # delay: added latency; duplicate: copy offset
+    jitter_s: float = 0.0  # reorder: uniform extra delay in [0, jitter_s)
+    start: float = 0.0
+    end: float = INF
+
+    def __post_init__(self):
+        if self.kind not in MESSAGE_FAULT_KINDS:
+            raise ValueError(f"unknown message fault kind {self.kind!r}; "
+                             f"pick from {MESSAGE_FAULT_KINDS}")
+
+    def active(self, topic: str, t: float) -> bool:
+        return self.start <= t < self.end and fnmatchcase(topic, self.topic)
+
+
+@dataclass(frozen=True)
+class SiteFault:
+    """Site ``site`` crashes at ``t_down`` (losing in-flight work and every
+    delivery addressed to it) and restarts cold at ``t_up`` (never, when
+    infinite)."""
+
+    site: str
+    t_down: float
+    t_up: float = INF
+
+    def down(self, t: float) -> bool:
+        return self.t_down <= t < self.t_up
+
+
+@dataclass(frozen=True)
+class PartitionFault:
+    """The link between sites ``a`` and ``b`` is cut over
+    ``[t_start, t_heal)``.  ``mode="queue"`` holds crossing deliveries and
+    releases them at heal time (the delayed-model-sync scenario);
+    ``mode="drop"`` dead-letters them."""
+
+    a: str
+    b: str
+    t_start: float
+    t_heal: float = INF
+    mode: str = "queue"  # "queue" | "drop"
+
+    def cuts(self, x: str, y: str, t: float) -> bool:
+        return ({x, y} == {self.a, self.b}
+                and self.t_start <= t < self.t_heal)
+
+
+@dataclass(frozen=True)
+class SensorFault:
+    """Injection-layer chaos for streams matching ``stream`` (fnmatch):
+    per-window drop/duplicate/out-of-order probabilities plus per-record
+    dropout, active while the window's nominal injection time is in
+    ``[start, end)``."""
+
+    stream: str = "*"
+    p_drop_window: float = 0.0
+    p_dup_window: float = 0.0
+    p_reorder: float = 0.0
+    reorder_jitter_s: float = 1.0
+    p_drop_record: float = 0.0
+    start: float = 0.0
+    end: float = INF
+
+
+def tree_checksum(tree: Any) -> int:
+    """CRC32 over every leaf's bytes of a params pytree (QTensor leaves
+    flatten to their int8 ``q`` + f32 ``scale`` children, so a single
+    bit-flip anywhere in an int8 publish changes the checksum).  Used by
+    the checksummed model-sync protocol: the training site stamps the
+    publish, ``ModelSync`` verifies on deliver."""
+    import jax
+
+    c = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        a = np.ascontiguousarray(np.asarray(leaf))
+        c = zlib.crc32(a.tobytes(), c)
+    return c
+
+
+def corrupt_tree(tree: Any, rng: np.random.Generator) -> Any:
+    """Flip one random bit in one random array leaf of a pytree copy (the
+    original is untouched).  On an int8 ``QTensor`` tree this is exactly a
+    bit-flipped quantized weight in transit."""
+    import jax
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    idx = [i for i, l in enumerate(leaves)
+           if hasattr(l, "dtype") and np.asarray(l).size > 0]
+    if not idx:
+        return tree
+    i = idx[int(rng.integers(len(idx)))]
+    arr = np.array(leaves[i], copy=True)
+    flat = arr.reshape(-1).view(np.uint8)
+    flat[int(rng.integers(flat.size))] ^= np.uint8(1 << int(rng.integers(8)))
+    leaves = list(leaves)
+    leaves[i] = arr
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _corrupt_payload(payload: Any, rng: np.random.Generator) -> Any:
+    """Corrupt a bus payload *copy*: the model tree when the payload carries
+    one (``params``), else its data arrays (``x``); routing metadata
+    (stream/window keys) is never touched — corruption models a damaged
+    transfer, not a misrouted one."""
+    if isinstance(payload, dict):
+        out = dict(payload)
+        if "params" in out and out["params"] is not None:
+            out["params"] = corrupt_tree(out["params"], rng)
+        elif "x" in out:
+            out["x"] = corrupt_tree(np.asarray(out["x"]), rng)
+        return out
+    return payload
+
+
+def _sid_key(sid: str) -> int:
+    return zlib.crc32(sid.encode("utf-8"))
+
+
+class FaultPlane:
+    """Seeded fault injector for one (or more, via :meth:`reset`) runs.
+
+    Attach to a run by passing it to ``FleetBusExecutor(fault_plane=...)``
+    (which wires it into the ``TopicBus``, installs its restart events on
+    the kernel, and consults it at stage completion), or manually by
+    setting ``bus.fault_plane`` and calling :meth:`install`.
+    """
+
+    def __init__(
+        self,
+        seed: int = 0,
+        *,
+        message_faults: Sequence[MessageFault] = (),
+        site_faults: Sequence[SiteFault] = (),
+        partitions: Sequence[PartitionFault] = (),
+        sensor_faults: Sequence[SensorFault] = (),
+    ):
+        self.seed = int(seed)
+        self.message_faults = tuple(message_faults)
+        self.site_faults = tuple(site_faults)
+        self.partitions = tuple(partitions)
+        self.sensor_faults = tuple(sensor_faults)
+        self.reset()
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def reset(self) -> None:
+        """Rewind to a pristine pre-run state: fresh per-spec RNGs (so a
+        second run under the same seed replays the identical fault
+        schedule), empty stats/event log, no restart hooks."""
+        self._rng_msg = [np.random.default_rng([self.seed, 3, i])
+                         for i in range(len(self.message_faults))]
+        self.stats: Counter = Counter()
+        self.events: List[Tuple[float, str, str]] = []
+        self._restart_hooks: List[Callable[[str], None]] = []
+
+    def install(self, kernel) -> None:
+        """Schedule the plane's own events on a run's kernel: crash markers
+        and the restart firings that invoke registered hooks."""
+        for f in self.site_faults:
+            self.note("site_crash_scheduled", f.t_down, f.site)
+            if f.t_up != INF:
+                kernel.at(f.t_up,
+                          lambda s=f.site, t=f.t_up: self._fire_restart(s, t))
+
+    def on_restart(self, hook: Callable[[str], None]) -> None:
+        """Register a cold-restart hook; called with the site name when a
+        crashed site comes back up."""
+        self._restart_hooks.append(hook)
+
+    def _fire_restart(self, site: str, t: float) -> None:
+        self.note("site_restart", t, site)
+        for hook in self._restart_hooks:
+            hook(site)
+
+    # -- bookkeeping ---------------------------------------------------------
+
+    def note(self, kind: str, t: float, detail: str = "") -> None:
+        self.stats[kind] += 1
+        self.events.append((float(t), kind, detail))
+
+    def schedule_signature(self) -> List[Tuple[float, str, str]]:
+        """The realized fault schedule — what the determinism contract
+        compares across runs and seeds."""
+        return list(self.events)
+
+    # -- site faults ---------------------------------------------------------
+
+    def site_down(self, site: str, t: float) -> bool:
+        return any(f.site == site and f.down(t) for f in self.site_faults)
+
+    def partitioned(self, a: str, b: str, t: float
+                    ) -> Optional[PartitionFault]:
+        for p in self.partitions:
+            if p.cuts(a, b, t):
+                return p
+        return None
+
+    # -- message faults (TopicBus.publish interposition) ---------------------
+
+    def plan_deliveries(self, topic: str, payload: Any, src: str, dst: str,
+                        t_pub: float, dt: float, bus
+                        ) -> List[Tuple[float, Any]]:
+        """Turn one (publish, subscriber) pair into its faulted delivery
+        list: ``[(deliver_time, payload), ...]`` — empty when dropped/lost,
+        two entries when duplicated, a corrupted payload copy when
+        corrupted.  ``bus`` receives dead letters for hard partitions."""
+        from repro.runtime.bus import DeadLetter
+
+        if self.site_down(src, t_pub):
+            self.note("lost_publish_site_down", t_pub, f"{src}:{topic}")
+            return []
+        t_del = t_pub + dt
+        part = self.partitioned(src, dst, t_pub)
+        if part is not None:
+            if part.mode == "drop" or part.t_heal == INF:
+                bus.dead_letters.append(DeadLetter(
+                    topic=topic, src=src, dst=dst, t=t_pub,
+                    reason="partitioned"))
+                self.note("partition_drop", t_pub, f"{src}->{dst}:{topic}")
+                return []
+            # queue mode: the transfer re-sends after the heal
+            t_del = part.t_heal + dt
+            self.note("partition_queued", t_pub, f"{src}->{dst}:{topic}")
+
+        out: List[Tuple[float, Any]] = [(t_del, payload)]
+        for i, mf in enumerate(self.message_faults):
+            if not mf.active(topic, t_pub):
+                continue
+            rng = self._rng_msg[i]
+            nxt: List[Tuple[float, Any]] = []
+            for t_i, pl in out:
+                if rng.random() >= mf.p:
+                    nxt.append((t_i, pl))
+                    continue
+                if mf.kind == "drop":
+                    self.note("msg_drop", t_pub, f"{topic}->{dst}")
+                elif mf.kind == "delay":
+                    self.note("msg_delay", t_pub, f"{topic}->{dst}")
+                    nxt.append((t_i + mf.delay_s, pl))
+                elif mf.kind == "reorder":
+                    j = float(rng.uniform(0.0, mf.jitter_s))
+                    self.note("msg_reorder", t_pub, f"{topic}->{dst}")
+                    nxt.append((t_i + j, pl))
+                elif mf.kind == "duplicate":
+                    self.note("msg_duplicate", t_pub, f"{topic}->{dst}")
+                    off = mf.delay_s if mf.delay_s > 0 else 1e-3
+                    nxt.append((t_i, pl))
+                    nxt.append((t_i + off, pl))
+                elif mf.kind == "corrupt":
+                    self.note("msg_corrupt", t_pub, f"{topic}->{dst}")
+                    nxt.append((t_i, _corrupt_payload(pl, rng)))
+            out = nxt
+        return out
+
+    # -- sensor faults (injection-layer interposition) -----------------------
+
+    def sensor_windows(self, sid: str, w: int, t: float,
+                       data: Dict[str, np.ndarray]
+                       ) -> List[Tuple[float, Dict[str, np.ndarray]]]:
+        """Turn one nominal window injection into its faulted delivery
+        list of ``(inject_time, data)`` — possibly empty (window dropped),
+        jittered (out-of-order), duplicated, or with rows removed (record
+        dropout).  The RNG derives from (seed, spec, stream, window), so
+        the schedule is independent of call order."""
+        out: List[Tuple[float, Dict[str, np.ndarray]]] = [(t, data)]
+        for i, sf in enumerate(self.sensor_faults):
+            if not fnmatchcase(sid, sf.stream) or not (sf.start <= t < sf.end):
+                continue
+            rng = np.random.default_rng([self.seed, 7, i, _sid_key(sid), w])
+            if sf.p_drop_record > 0.0:
+                nxt = []
+                for t_i, d in out:
+                    keep = rng.random(len(d["x"])) >= sf.p_drop_record
+                    if not keep.any():
+                        keep[0] = True  # a sensor glitch, not a dead window
+                    if not keep.all():
+                        self.note("sensor_record_dropout", t,
+                                  f"{sid}/w{w}:{int((~keep).sum())}")
+                        d = {"x": d["x"][keep], "y": d["y"][keep]}
+                    nxt.append((t_i, d))
+                out = nxt
+            if rng.random() < sf.p_drop_window:
+                self.note("sensor_window_drop", t, f"{sid}/w{w}")
+                return []
+            if rng.random() < sf.p_reorder:
+                out = [(t_i + float(rng.uniform(0.0, sf.reorder_jitter_s)), d)
+                       for t_i, d in out]
+                self.note("sensor_window_reorder", t, f"{sid}/w{w}")
+            if rng.random() < sf.p_dup_window:
+                out = out + [(t_i + 1e-3, d) for t_i, d in out]
+                self.note("sensor_window_duplicate", t, f"{sid}/w{w}")
+        return out

@@ -34,6 +34,7 @@ T_MODEL = "model/latest"
 T_ARCHIVE = "archive/put"
 T_REQUEST = "serve/request"
 T_RESPONSE = "serve/response"
+T_RESYNC = "model/rerequest"
 
 
 def stream_topic(base: str, stream_id: str) -> str:

@@ -59,6 +59,10 @@ class ForecastQuery:
     answer: List[float] = field(default_factory=list)
     model_window: int = -1
     context_window: int = -1
+    # True when any tick of this query was answered by the batch-model
+    # fallback (cold start, or the staleness watchdog tripping because the
+    # speed model lagged past the executor's bound)
+    served_fallback: bool = False
     # the query's working (lag, F) context; set at admission, rolled by
     # horizon feedback
     ctx: Optional[np.ndarray] = None
@@ -145,6 +149,12 @@ class QueryPlane:
     def has_context(self, sid: str) -> bool:
         return sid in self._ctx
 
+    def context_window(self, sid: str) -> int:
+        """The freshest window this stream's context came from (-1 before
+        the first window lands) — what the staleness watchdog compares the
+        served ``model_window`` against."""
+        return self._ctx_window.get(sid, -1)
+
     def submit(self, query: ForecastQuery) -> None:
         self.sched.submit(query)
         self.submitted += 1
@@ -203,17 +213,22 @@ class QueryPlane:
 
     def apply(self, by_stream: Dict[str, List[ForecastQuery]],
               preds: Sequence[np.ndarray],
-              model_windows: Dict[str, int]) -> List[ForecastQuery]:
+              model_windows: Dict[str, int],
+              fallback: Optional[Dict[str, bool]] = None
+              ) -> List[ForecastQuery]:
         """Append the tick's predictions to their queries (same slot order
         ``build_batch`` emitted) and roll each unfinished horizon query's
         context: next row = last row with the target column replaced by the
-        prediction, window shifted by one."""
+        prediction, window shifted by one.  ``fallback[sid]`` stamps the
+        stream's answers as served from the batch-model fallback."""
         answered = []
         for sid, pred in zip(self.ids, preds):
             for j, q in enumerate(by_stream[sid]):
                 p = float(np.asarray(pred[j]).reshape(-1)[0])
                 q.answer.append(p)
                 q.model_window = model_windows.get(sid, -1)
+                if fallback is not None and fallback.get(sid, False):
+                    q.served_fallback = True
                 if not q.done:
                     nxt = np.array(q.ctx[-1], copy=True)
                     nxt[self.target_col] = p

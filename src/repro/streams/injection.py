@@ -64,27 +64,43 @@ class BusInjector:
     With a ``stream_id``, the injector is one member of a fleet: it
     publishes on the per-stream topic ``topic/<stream_id>`` (the fleet
     executors subscribe the ``topic/+`` wildcard) and stamps the stream id
-    into every payload."""
+    into every payload.
+
+    A ``fault_plane`` models the sensor itself going bad: each nominal
+    window expands (via ``FaultPlane.sensor_windows``) into zero or more
+    actual publishes — dropped windows, out-of-order jitter, duplicates,
+    per-record dropout — before the payload ever reaches the bus."""
 
     def __init__(self, kernel, bus, topic: str, site: str,
-                 period_s: float = 30.0, stream_id: Optional[str] = None):
+                 period_s: float = 30.0, stream_id: Optional[str] = None,
+                 fault_plane=None):
         self.kernel = kernel
         self.bus = bus
         self.topic = topic if stream_id is None else f"{topic}/{stream_id}"
         self.site = site
         self.period_s = period_s
         self.stream_id = stream_id
+        self.fault_plane = fault_plane
         self.injected = 0
 
     def schedule_window(self, w: int, data: dict) -> float:
-        """Schedule window ``w``'s publish; returns its injection time."""
+        """Schedule window ``w``'s publish; returns its *nominal* injection
+        time (sensor faults may move, multiply, or remove the actual
+        publishes)."""
         t = w * self.period_s
-        payload = {"window": w, "x": data["x"], "y": data["y"]}
-        if self.stream_id is not None:
-            payload["stream"] = self.stream_id
-        nbytes = float(data["x"].nbytes + data["y"].nbytes)
-        self.kernel.at(
-            t, lambda: self.bus.publish(self.topic, payload, nbytes, self.site))
+        deliveries = [(t, data)]
+        if self.fault_plane is not None:
+            sid = self.stream_id if self.stream_id is not None else ""
+            deliveries = self.fault_plane.sensor_windows(sid, w, t, data)
+        for t_i, d in deliveries:
+            payload = {"window": w, "x": d["x"], "y": d["y"]}
+            if self.stream_id is not None:
+                payload["stream"] = self.stream_id
+            nbytes = float(d["x"].nbytes + d["y"].nbytes)
+            self.kernel.at(
+                t_i,
+                lambda payload=payload, nbytes=nbytes: self.bus.publish(
+                    self.topic, payload, nbytes, self.site))
         self.injected += 1
         return t
 

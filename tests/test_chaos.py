@@ -1,0 +1,198 @@
+"""Chaos-plane tests: kernel pause/resume ordering, dead-letter delivery,
+checksum/corruption primitives, seeded fault-schedule determinism, and the
+end-to-end properties the chaos bench gates on — same seed means a
+byte-identical run, corrupted int8 model publishes are never installed, and
+a stream whose sensor goes totally dark is quarantined without stalling the
+rest of the fleet."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.scenarios import (
+    ChaosHarness,
+    bus_signature,
+    forecast_signature,
+    ledger_signature,
+)
+from repro.runtime import (
+    EventKernel,
+    FaultPlane,
+    MessageFault,
+    SensorFault,
+    TopicBus,
+    Topology,
+    corrupt_tree,
+    paper_topology,
+    tree_checksum,
+)
+
+SEED = 0
+PERIOD = 5.0
+
+
+@pytest.fixture(scope="module")
+def harness():
+    return ChaosHarness(n_streams=2, n_windows=3, records_per_window=80,
+                        period_s=PERIOD, qps=6.0)
+
+
+# ---------------------------------------------------------------------------
+# kernel + bus primitives
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_run_until_pauses_and_resumes_in_order():
+    """run(until=) must not consume events beyond the horizon: pausing
+    mid-schedule and resuming replays the remainder in exact (time, FIFO)
+    order, including events that share a timestamp."""
+    k = EventKernel()
+    fired = []
+    for name, t in [("a", 1.0), ("b", 2.0), ("b2", 2.0), ("c", 3.0)]:
+        k.at(t, lambda n=name: fired.append((n, k.now)))
+    k.run(until=1.5)
+    assert fired == [("a", 1.0)]
+    k.run(until=2.0)
+    assert fired == [("a", 1.0), ("b", 2.0), ("b2", 2.0)]
+    k.run()
+    assert fired == [("a", 1.0), ("b", 2.0), ("b2", 2.0), ("c", 3.0)]
+
+
+def test_publish_without_link_is_dead_lettered_not_raised():
+    from repro.runtime import Site
+
+    topo = Topology(sites={
+        "edge": Site("edge", "edge", compute_scale=1.0, memory_bytes=1e9,
+                     workers=1),
+        "cloud": Site("cloud", "cloud", compute_scale=1.0, memory_bytes=1e9,
+                      workers=1),
+    }, links={})  # no link between them
+    k = EventKernel()
+    bus = TopicBus(k, topo)
+    got = []
+    bus.subscribe("data/+", "cloud", lambda m: got.append(m))
+    bus.publish("data/t00", {"x": 1}, src="edge", nbytes=8.0)
+    k.run()
+    assert got == []
+    assert len(bus.dead_letters) == 1
+    dl = bus.dead_letters[0]
+    assert dl.topic == "data/t00" and dl.reason == "no-link"
+    assert (dl.src, dl.dst) == ("edge", "cloud")
+
+
+def test_tree_checksum_catches_single_bit_flip():
+    tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": np.zeros(4, dtype=np.int8)}
+    ck = tree_checksum(tree)
+    assert ck == tree_checksum(tree)  # stable
+    for trial in range(8):
+        bad = corrupt_tree(tree, np.random.default_rng(trial))
+        assert tree_checksum(bad) != ck
+    assert tree_checksum(tree) == ck  # corrupt_tree copies, never mutates
+
+
+# ---------------------------------------------------------------------------
+# fault-plane determinism units
+# ---------------------------------------------------------------------------
+
+
+def _plan_all(plane, n=40):
+    topo = paper_topology()
+    k = EventKernel()
+    bus = TopicBus(k, topo, fault_plane=plane)
+    out = []
+    for i in range(n):
+        out.append([t for t, _ in plane.plan_deliveries(
+            f"model/latest/t{i % 3:02d}", {"i": i}, "cloud", "edge",
+            t_pub=float(i), dt=0.05, bus=bus)])
+    return out
+
+
+def test_message_fault_schedule_is_seed_deterministic():
+    spec = [MessageFault("model/latest/*", "drop", p=0.3),
+            MessageFault("model/latest/*", "delay", p=0.5, delay_s=1.0,
+                         jitter_s=0.5)]
+    a = _plan_all(FaultPlane(11, message_faults=list(spec)))
+    b = _plan_all(FaultPlane(11, message_faults=list(spec)))
+    c = _plan_all(FaultPlane(12, message_faults=list(spec)))
+    assert a == b
+    assert a != c
+    p = FaultPlane(11, message_faults=list(spec))
+    first = _plan_all(p)
+    p.reset()
+    assert _plan_all(p) == first  # reset() rewinds the RNG streams
+
+
+def test_sensor_fault_windows_are_seed_deterministic():
+    spec = SensorFault(p_drop_window=0.3, p_dup_window=0.3, p_reorder=0.5,
+                       reorder_jitter_s=1.0, p_drop_record=0.2)
+    data = {"x": np.ones((20, 5), np.float32), "y": np.ones(20, np.float32)}
+
+    def schedule(plane):
+        out = []
+        for w in range(12):
+            for t, d in plane.sensor_windows("t00", w, float(w), data):
+                out.append((w, t, d["x"].shape[0]))
+        return out
+
+    a = schedule(FaultPlane(5, sensor_faults=[spec]))
+    b = schedule(FaultPlane(5, sensor_faults=[spec]))
+    c = schedule(FaultPlane(6, sensor_faults=[spec]))
+    assert a == b
+    assert a != c
+
+
+# ---------------------------------------------------------------------------
+# end-to-end properties (small fleet, module-shared pretrain)
+# ---------------------------------------------------------------------------
+
+
+def test_same_seed_same_run_different_seed_differs(harness):
+    """The satellite determinism contract: one fault seed reproduces the
+    whole run byte for byte — bus log, latency ledger, forecasts and served
+    answers — while a different seed yields a different fault schedule."""
+    _, r1 = harness.run_scenario("sensor_chaos", seed=SEED)
+    _, r2 = harness.run_scenario("sensor_chaos", seed=SEED)
+    _, r3 = harness.run_scenario("sensor_chaos", seed=SEED + 7)
+    assert bus_signature(r1) == bus_signature(r2)
+    assert ledger_signature(r1) == ledger_signature(r2)
+    assert forecast_signature(r1) == forecast_signature(r2)
+    assert bus_signature(r1) != bus_signature(r3)
+
+
+def test_corrupted_sync_always_detected_never_installed(harness):
+    """Bit-flip every int8 model publish: the checksum must reject 100% of
+    them, no speed model may ever be installed, and serving must survive on
+    the batch path (every answer is fallback or batch-model)."""
+    plane = FaultPlane(SEED, message_faults=[
+        MessageFault("model/latest/*", "corrupt", p=1.0)])
+    ex = harness.executor(plane, quantized=True)
+    res = ex.run(harness._base_streams, harness.bp, jax.random.PRNGKey(1))
+    chaos = res.chaos
+    assert chaos["fault_stats"]["msg_corrupt"] > 0
+    # every corrupted delivery was rejected at verification
+    assert chaos["corrupt_rejected"] == chaos["fault_stats"]["msg_corrupt"]
+    assert chaos["checksum_verified"] == 0  # nothing clean ever arrived
+    # no speed model was ever installed, so serving never left the fallback
+    for q in res.queries:
+        assert q.served_fallback or q.model_window < 0
+    # and the re-request path was exercised (bounded retries)
+    assert chaos["resync_requests"] > 0
+
+
+def test_dark_sensor_stream_is_quarantined_fleet_continues(harness):
+    """t00's sensor goes permanently dark after the first window: the fleet
+    must quarantine it (after repeated aggregation misses) instead of
+    stalling every other stream's windowed dispatch."""
+    plane = FaultPlane(SEED, sensor_faults=[
+        SensorFault(stream="t00", p_drop_window=1.0, start=0.9 * PERIOD)])
+    ex = harness.executor(plane)
+    res = ex.run(harness._base_streams, harness.bp, jax.random.PRNGKey(1))
+    assert "t00" in res.chaos["quarantined"]
+    assert res.chaos["fault_stats"]["stream_quarantined"] >= 1
+    # the healthy stream kept scoring windows after t00 went dark (window 0
+    # bootstraps the speed model, so a clean run scores n_windows - 1)
+    assert len(res.results["t01"].records) == harness.n_windows - 1
+    assert (len(res.results["t00"].records)
+            < len(res.results["t01"].records))
+    # quarantine must not poison the run: the healthy stream still trains
+    assert res.train_dispatches >= 1

@@ -263,3 +263,46 @@ def test_fleet_bus_serving_replays_trace_e2e(fleet_setup, cfg):
         # staleness bound: the serving model is at most one training
         # window behind the context it answered against
         assert 0 <= q.context_window - q.model_window <= 1
+
+
+def test_staleness_watchdog_serves_fallback_under_delayed_sync(fleet_setup,
+                                                               cfg):
+    """Regression for the staleness watchdog: when every model-sync publish
+    is delayed well past the staleness bound, answers whose speed model has
+    fallen more than ``staleness_bound`` windows behind their context must
+    be served from the batch fallback (and stamped ``served_fallback``),
+    while every answer still served from a speed model keeps honouring the
+    bound."""
+    from repro.core.scenarios import CHAOS_STAGE_COSTS
+    from repro.runtime import FaultPlane, MessageFault
+
+    streams, bp = fleet_setup
+    ids = list(streams)
+    ff = lstm_fleet_forecaster(cfg, epochs=EPOCHS, batch_size=64)
+    period = 5.0
+    # window 0's sync (published ~0.3s) lands clean; every later sync is
+    # delayed 3 windows, so the serving model is pinned at window 0
+    plane = FaultPlane(0, message_faults=[
+        MessageFault("model/latest/*", "delay", p=1.0, delay_s=3 * period,
+                     start=0.8 * period)])
+    # arrivals span windows 1..2+, after the delayed syncs start biting
+    trace = open_loop_trace(ids, qps=3.0, n_requests=30, start=2 * period,
+                            seed=3)
+    ex = FleetBusExecutor(
+        FleetStages.build(ff, mode="dynamic"), edge_cloud_integrated(),
+        paper_topology(), window_period_s=period, query_trace=trace,
+        serve_slots=4, fault_plane=plane,
+        stage_costs=dict(CHAOS_STAGE_COSTS), staleness_bound=1)
+    res = ex.run(streams, bp, jax.random.PRNGKey(1), n_windows=3)
+
+    s = res.serving
+    assert s is not None and s["n_answered"] == 30
+    assert plane.stats["msg_delay"] > 0
+    # the watchdog flipped stale answers to the fallback ...
+    assert s["fallback_frac"] > 0.0
+    assert any(q.served_fallback for q in res.queries)
+    # ... and whatever was still served from a speed model obeys the bound
+    for q in res.queries:
+        if not q.served_fallback and q.model_window >= 0:
+            assert 0 <= q.context_window - q.model_window <= 1
+    assert s["max_staleness"] <= 1
