@@ -56,6 +56,11 @@ CHAOS_STAGE_COSTS: Dict[str, float] = {
     "model_sync": 0.01,
     "data_sync": 0.005,
     "serving": 0.02,
+    # the elastic control plane's fixed decision cost (elastic runs only;
+    # chaos scenarios never enable the controller, so this key is inert
+    # there — it exists so elastic runs under stage_costs replay
+    # byte-for-byte too)
+    "placement_controller": 0.005,
 }
 
 SCENARIOS = ("fault_free", "site_crash", "partitioned_sync", "sensor_chaos",

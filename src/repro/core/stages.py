@@ -311,6 +311,30 @@ class FleetState:
     def __len__(self) -> int:
         return len(self.streams)
 
+    def handoff(self, sid: StreamId) -> float:
+        """Prepare one stream's device-resident state for migration to
+        another site and return its transfer size in bytes.
+
+        A stream fresh out of fleet training holds a *lazy* params handle
+        (``FleetParamView``) pointing into the training site's stacked
+        device buffer — a bucket-resident view, not bytes the stream owns.
+        Migration is exactly the boundary where that view must leave its
+        stream-count bucket, so the handoff materializes it to a plain host
+        pytree; the next fleet dispatch at the new site re-admits the stream
+        into whatever bucket its new cohort hashes to."""
+        import jax
+
+        from repro.training.compiled import materialize_params
+
+        st = self.state(sid)
+        if st.speed_params is not None:
+            st.speed_params = materialize_params(st.speed_params)
+        nbytes = 0.0
+        for part in (st.speed_params, st.prev_preds, st.prev_y):
+            for leaf in jax.tree_util.tree_leaves(part):
+                nbytes += float(np.asarray(leaf).nbytes)
+        return nbytes
+
 
 def resolve_fleet_params(batch_params: Any, ids: List[StreamId]
                          ) -> Dict[StreamId, Params]:
@@ -370,11 +394,18 @@ class FleetInference(Stage):
         self.stage = stage
         self.kind = kind
         self.name = stage.name
+        # windows served / vmapped dispatches spent — the elastic bench
+        # gates dispatches/tick == 1 across migrations (same contract as
+        # ServingStage)
+        self.ticks = 0
+        self.dispatches = 0
 
     def compute(self, *, fleet: Dict[StreamId, Dict[str, Any]]
                 ) -> Dict[str, Any]:
         sids = list(fleet)
+        self.ticks += 1
         if len(sids) <= 1:
+            self.dispatches += 1
             return {"fleet": {sid: self.stage(**kw)
                               for sid, kw in fleet.items()}}
         t0 = time.perf_counter()
@@ -392,8 +423,11 @@ class FleetInference(Stage):
             else:
                 p = kw["batch_params"]
             params.append(p)
+        d0 = getattr(self.forecaster, "predict_dispatches", 0)
         preds = self.forecaster.predict_fleet(
             params, [fleet[sid]["x"] for sid in sids])
+        d1 = getattr(self.forecaster, "predict_dispatches", 0)
+        self.dispatches += (d1 - d0) if d1 > d0 else 1
         wall = time.perf_counter() - t0
         out: Dict[StreamId, StageOutput] = {}
         for sid, pred in zip(sids, preds):

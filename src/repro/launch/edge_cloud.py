@@ -156,7 +156,8 @@ def run_real_fleet(args) -> None:
         ex = FleetBusExecutor(stages, dep, paper_topology(), cost,
                               window_period_s=args.period, gate=gate,
                               quantized_sync=args.quantized,
-                              qps=args.qps, serve_slots=args.slots)
+                              qps=args.qps, serve_slots=args.slots,
+                              elastic=args.elastic or False)
         res = ex.run(streams, bp, jax.random.PRNGKey(1))
         print(f"\n[{dep.name}] {args.streams} streams x {args.windows} "
               f"windows ({args.scenario} scenario"
@@ -192,6 +193,22 @@ def run_real_fleet(args) -> None:
             print(f"    offered={s['offered_qps']:.1f} qps "
                   f"sustained={s['sustained_qps']:.1f} qps "
                   f"p50={s['p50_s']*1e3:.2f}ms p99={s['p99_s']*1e3:.2f}ms")
+        if res.placement is not None:
+            pl = res.placement
+            ctl = pl["controller"]
+            print(f"  elastic ({pl['mode']}, interval "
+                  f"{pl['control_interval_s']:.1f}s): "
+                  f"{ctl['migrations']} migrations, "
+                  f"{ctl['scale_events']} scale events "
+                  f"({ctl['proactive_scale_events']} proactive), "
+                  f"{ctl['ticks']} control ticks")
+            for m in pl["migrations"]:
+                print(f"    t={m['t']:.1f}s {m['sid']}: {m['from']} -> "
+                      f"{m['to']} ({m['state_nbytes']/1e3:.1f} KB state)")
+            placed = " ".join(f"{sid}@{site}" for sid, site
+                              in sorted(pl["stream_site"].items()))
+            print(f"    final placement: {placed}; workers "
+                  f"{pl['base_workers']} -> {pl['final_workers']}")
         if res.failures:
             print(f"  !! {len(res.failures)} capacity failures "
                   f"(first: {res.failures[0]})")
@@ -388,6 +405,16 @@ def main() -> None:
     p.add_argument("--slots", type=int, default=4,
                    help="request plane: fixed batch slots in the "
                         "slot-recycling continuous batcher")
+    p.add_argument("--elastic", nargs="?", const="proactive", default=None,
+                   choices=["reactive", "proactive"],
+                   help="turn on the elastic placement plane (fleet mode): "
+                        "a PlacementController migrates hot/drifting "
+                        "streams to cloud and cold ones back to edge, and "
+                        "scales Site.workers from queue-depth EWMAs — "
+                        "'proactive' (the default when the flag is bare) "
+                        "additionally scales ahead of load spikes by "
+                        "forecasting the per-site backlog with a small "
+                        "speed-layer LSTM")
     p.add_argument("--chaos", default=None,
                    help="run one chaos scenario from core.scenarios "
                         "(fault_free, site_crash, partitioned_sync, "
@@ -416,6 +443,9 @@ def main() -> None:
         p.error("--qps requires fleet mode (--real with --streams > 1): the "
                 "request plane serves from the fleet executor's "
                 "device-resident state")
+    if args.elastic and not (args.real and args.streams > 1):
+        p.error("--elastic requires fleet mode (--real with --streams > 1): "
+                "placement is a per-stream fleet decision")
     if args.real and args.streams > 1:
         run_real_fleet(args)
     elif args.real:

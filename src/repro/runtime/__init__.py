@@ -8,6 +8,7 @@ from repro.runtime.bus import (  # noqa: F401
     TopicBus,
     Topology,
     paper_topology,
+    topic_matches,
 )
 from repro.runtime.faults import (  # noqa: F401
     FaultPlane,
@@ -20,10 +21,18 @@ from repro.runtime.faults import (  # noqa: F401
 )
 from repro.runtime.deployment import (  # noqa: F401
     ALL_DEPLOYMENTS,
+    STREAM_MODULES,
     Deployment,
     cloud_centric,
     edge_centric,
     edge_cloud_integrated,
+)
+from repro.runtime.placement import (  # noqa: F401
+    LoadForecaster,
+    PlacementController,
+    PlacementDecision,
+    SiteSignal,
+    StreamSignal,
 )
 from repro.runtime.executor import (  # noqa: F401
     BusExecutor,

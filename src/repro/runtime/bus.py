@@ -20,7 +20,7 @@ class CapacityError(RuntimeError):
     speed-training OOM, Sec. 6.2)."""
 
 
-@dataclass(frozen=True)
+@dataclass
 class Site:
     """A compute location.
 
@@ -29,6 +29,8 @@ class Site:
     ``memory_bytes`` is the capacity model used for the OOM reproduction.
     ``workers`` is how many modules the site can execute concurrently
     (``BusExecutor`` site occupancy; the calibrated simulation ignores it).
+    ``workers`` is mutable: the elastic placement controller grows and
+    shrinks it at runtime, and executors resize their worker pools lazily.
     """
 
     name: str
@@ -131,6 +133,16 @@ class EventKernel:
         return self.now
 
 
+def topic_matches(pattern: str, topic: str) -> bool:
+    """MQTT single-level wildcard matching: ``+`` matches exactly one
+    ``/``-separated level, at any position.  Segment counts must agree —
+    ``a/+`` matches ``a/b`` but never ``a`` or ``a/b/c``."""
+    ps = pattern.split("/")
+    ts = topic.split("/")
+    return len(ps) == len(ts) and all(
+        p == "+" or p == t for p, t in zip(ps, ts))
+
+
 class TopicBus:
     """MQTT-like pub/sub across sites with link-cost delivery.
 
@@ -157,17 +169,50 @@ class TopicBus:
         self.topo = topo
         self.fault_plane = fault_plane
         self._subs: Dict[str, List[Tuple[str, Callable[[Message], None]]]] = {}
+        # patterns with a non-leaf "+" can't be dict-looked-up; they are the
+        # rare case, kept in a scan list (pattern, site, fn)
+        self._wild: List[Tuple[str, str, Callable[[Message], None]]] = []
         self.log: List[Message] = []
         self.dead_letters: List[DeadLetter] = []
 
+    @staticmethod
+    def _is_scan_pattern(topic: str) -> bool:
+        return "+" in topic.split("/")[:-1]
+
     def subscribe(self, topic: str, site: str, fn: Callable[[Message], None]):
-        self._subs.setdefault(topic, []).append((site, fn))
+        if self._is_scan_pattern(topic):
+            self._wild.append((topic, site, fn))
+        else:
+            self._subs.setdefault(topic, []).append((site, fn))
+
+    def unsubscribe(self, topic: str, site: str,
+                    fn: Callable[[Message], None]) -> bool:
+        """Remove one (site, fn) registration for ``topic``; returns whether
+        anything was removed.  Migration republishes a stream's topics by
+        unsubscribing the handler at the old site and re-subscribing it at
+        the new one — in-flight deliveries already scheduled keep the
+        handler they were matched to at publish time."""
+        if self._is_scan_pattern(topic):
+            for i, (pat, s, f) in enumerate(self._wild):
+                if pat == topic and s == site and f == fn:
+                    del self._wild[i]
+                    return True
+            return False
+        subs = self._subs.get(topic, [])
+        for i, (s, f) in enumerate(subs):
+            if s == site and f == fn:
+                del subs[i]
+                return True
+        return False
 
     def _matches(self, topic: str) -> List[Tuple[str, Callable[[Message], None]]]:
         subs = list(self._subs.get(topic, []))
         head, _, leaf = topic.rpartition("/")
-        if head and leaf != "+":
-            subs += self._subs.get(head + "/+", [])
+        if leaf != "+":
+            subs += self._subs.get((head + "/+") if head else "+", [])
+        if self._wild:
+            subs += [(s, f) for pat, s, f in self._wild
+                     if topic_matches(pat, topic)]
         return subs
 
     def publish(self, topic: str, payload: Any, nbytes: float, src: str) -> None:

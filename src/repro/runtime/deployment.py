@@ -3,8 +3,8 @@ placement maps.  The same module implementations run anywhere (Sec. 4.4's
 "same modules and implementations reused when switching deployments")."""
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict
+from dataclasses import dataclass, field
+from typing import Dict, Optional
 
 MODULES = (
     "data_injection",
@@ -17,14 +17,46 @@ MODULES = (
     "archiving",
 )
 
+# Modules whose placement is meaningful *per stream*: the inference chain a
+# fleet stream rides every window plus its model-sync install.  The elastic
+# placement controller migrates exactly these; data_injection stays at the
+# sensor and training/archiving stay fleet-global.
+STREAM_MODULES = (
+    "batch_inference",
+    "speed_inference",
+    "hybrid_inference",
+    "model_sync",
+)
+
 
 @dataclass(frozen=True)
 class Deployment:
+    """Module -> site placement, plus an optional per-stream overlay.
+
+    ``stream_placement`` maps a stream id to a site name; for the modules in
+    :data:`STREAM_MODULES` it overrides the fleet-wide placement for that
+    stream.  The dataclass stays frozen (the *identity* of a deployment never
+    changes) but the overlay dict is mutable: ``pin_stream`` /
+    ``unpin_stream`` are how static per-stream pins are expressed, and the
+    elastic executor reads it as the *initial* placement — runtime migrations
+    are tracked executor-side so one Deployment object can be reused across
+    runs."""
+
     name: str
     placement: Dict[str, str]  # module -> site name
+    stream_placement: Dict[str, str] = field(default_factory=dict)
 
-    def site_of(self, module: str) -> str:
+    def site_of(self, module: str, stream: Optional[str] = None) -> str:
+        if (stream is not None and module in STREAM_MODULES
+                and stream in self.stream_placement):
+            return self.stream_placement[stream]
         return self.placement[module]
+
+    def pin_stream(self, stream: str, site: str) -> None:
+        self.stream_placement[stream] = site
+
+    def unpin_stream(self, stream: str) -> None:
+        self.stream_placement.pop(stream, None)
 
 
 def edge_centric() -> Deployment:

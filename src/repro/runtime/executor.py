@@ -47,8 +47,9 @@ topic and serves the fleet through the batched int8 kernel.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple, Union
 
 import numpy as np
 
@@ -71,10 +72,11 @@ from repro.runtime.bus import (
     TopicBus,
     Topology,
 )
-from repro.runtime.deployment import Deployment
+from repro.runtime.deployment import STREAM_MODULES, Deployment
 from repro.runtime.latency import CostModel, LatencyLedger
 from repro.runtime.modules import (
     T_BATCH,
+    T_CTRL,
     T_HYBRID,
     T_MODEL,
     T_REQUEST,
@@ -83,6 +85,11 @@ from repro.runtime.modules import (
     T_SPEED,
     T_STREAM,
     stream_topic,
+)
+from repro.runtime.placement import (
+    PlacementController,
+    SiteSignal,
+    StreamSignal,
 )
 from repro.serving.query_plane import (
     QueryPlane,
@@ -290,11 +297,39 @@ class _BusRuntime:
         self.ledger.add("archiving", comp_s=0.0,
                         comm_s=msg.deliver_time - msg.publish_time)
 
+    def _pool(self, site) -> List[float]:
+        """The site's busy-until worker pool, lazily resized when the
+        elastic controller changed ``site.workers``: grown workers start
+        idle now; a shrink drops idle entries only (a busy worker finishes
+        what it admitted — the pool just stops assigning to it)."""
+        now = self.kernel.now
+        pool = self._free.setdefault(site.name, [now] * max(site.workers, 1))
+        want = max(site.workers, 1)
+        if len(pool) < want:
+            pool.extend([now] * (want - len(pool)))
+        elif len(pool) > want:
+            for i in range(len(pool) - 1, -1, -1):
+                if len(pool) <= want:
+                    break
+                if pool[i] <= now:
+                    del pool[i]
+        return pool
+
+    def _backlog_s(self, site_name: str) -> float:
+        """Seconds of admitted-but-unfinished work queued on the site."""
+        now = self.kernel.now
+        return sum(max(0.0, p - now) for p in self._free.get(site_name, []))
+
     def _schedule(self, module: str, wall_s: float, comm_s: float,
-                  done: Optional[Callable[[], None]] = None) -> None:
+                  done: Optional[Callable[[], None]] = None,
+                  site_name: Optional[str] = None) -> None:
         """Account a stage that took ``wall_s`` real seconds: rescale to the
         site's hardware class, queue it behind earlier work on the site's
         worker pool, and fire ``done`` at its virtual completion.
+
+        ``site_name`` overrides the deployment's placement for the module —
+        the elastic fleet path schedules a migrated stream's stages on the
+        stream's current site, not the static one.
 
         An optional ``stage_costs`` map (module -> wall seconds) replaces
         the measured wall with a fixed virtual cost — the chaos suite uses
@@ -303,14 +338,21 @@ class _BusRuntime:
 
         If the module's site is down (``fault_plane.site_down``) when the
         stage would complete, the in-flight work is lost: no ledger entry,
-        no completion callback — a crash loses whatever was computing."""
-        site = self._site(module)
+        no completion callback — a crash loses whatever was computing.
+
+        The site's queue depth is sampled twice per stage — at entry
+        (backlog in front of this work) and again at completion/publish
+        time — so the ledger's depth series sees queue growth *between*
+        stage entries instead of aliasing it to zero."""
+        site = (self.topo.sites[site_name] if site_name is not None
+                else self._site(module))
         sc = getattr(self, "stage_costs", None)
         if sc is not None and module in sc:
             wall_s = sc[module]
         scaled = wall_s / max(site.compute_scale, 1e-9)
-        pool = self._free.setdefault(
-            site.name, [self.kernel.now] * max(site.workers, 1))
+        pool = self._pool(site)
+        self.ledger.sample_depth(site.name, self.kernel.now,
+                                 self._backlog_s(site.name))
         i = min(range(len(pool)), key=pool.__getitem__)
         start = max(self.kernel.now, pool[i])
         queue_s = start - self.kernel.now
@@ -324,6 +366,8 @@ class _BusRuntime:
                 return
             self.ledger.add(module, comp_s=scaled, comm_s=comm_s,
                             queue_s=queue_s)
+            self.ledger.sample_depth(site.name, self.kernel.now,
+                                     self._backlog_s(site.name))
             if done is not None:
                 done()
 
@@ -644,6 +688,14 @@ class FleetBusRunResult(FleetRunResult):
     # undeliverable publish
     dead_letters: List[Any] = field(default_factory=list)
     chaos: Optional[Dict[str, Any]] = None
+    # the elastic placement plane (when the run had a controller): controller
+    # decisions, realized migrations, final per-stream site map, worker-count
+    # history — plus per-stage fleet-inference dispatch accounting and each
+    # stream's final (materialized) speed-model params, which the
+    # determinism regression compares byte-for-byte
+    placement: Optional[Dict[str, Any]] = None
+    infer_dispatches: Optional[Dict[str, Dict[str, int]]] = None
+    final_params: Optional[Dict[StreamId, Any]] = None
 
     def table3(self) -> Dict[str, Dict[str, float]]:
         return self.ledger.table()
@@ -828,7 +880,20 @@ class FleetBusExecutor(_BusRuntime):
 
     ``stage_costs`` (module -> wall seconds) replaces measured stage walls
     with fixed virtual costs so chaos runs are byte-identically replayable
-    under one fault seed."""
+    under one fault seed.
+
+    ``elastic=True`` (or ``"reactive"``/``"proactive"``) turns on the
+    placement plane: per-stream (exact-topic) subscriptions instead of the
+    one-wildcard-per-module wiring, and a
+    :class:`~repro.runtime.placement.PlacementController` driven by a
+    periodic ``ctrl/tick`` bus subscription that migrates hot/drifting
+    streams to cloud (republishing their subscriptions and handing their
+    device-resident state across — ``FleetState.handoff``), demotes cold
+    ones back to edge, and grows/shrinks ``Site.workers`` reactively from
+    queue-depth EWMAs and proactively from a speed-layer load forecast.
+    The aggregated one-dispatch-per-window train/predict path is untouched:
+    aggregation happens above placement, so migration only changes where
+    occupancy is charged and results fan out from."""
 
     def __init__(
         self,
@@ -853,6 +918,10 @@ class FleetBusExecutor(_BusRuntime):
         agg_timeout_s: Optional[float] = None,
         quarantine_after: int = 2,
         max_resync: int = 3,
+        elastic: Union[bool, str] = False,
+        controller_factory: Optional[
+            Callable[[], PlacementController]] = None,
+        control_interval_s: Optional[float] = None,
     ):
         self.stages = stages
         self.dep = deployment
@@ -875,6 +944,14 @@ class FleetBusExecutor(_BusRuntime):
                               else 0.25 * window_period_s)
         self.quarantine_after = quarantine_after
         self.max_resync = max_resync
+        # the elastic placement plane: False (static), True/"proactive"
+        # (reactive + forecast-ahead scaling), or "reactive".  A fresh
+        # controller is built per run (``controller_factory`` for custom
+        # thresholds) so repeated runs replay identically.
+        self.elastic = elastic
+        self.controller_factory = controller_factory
+        self.control_interval_s = control_interval_s
+        self.controller: Optional[PlacementController] = None
 
     @property
     def _single_stages(self) -> PipelineStages:
@@ -930,24 +1007,81 @@ class FleetBusExecutor(_BusRuntime):
         self._query_lat: Dict[int, float] = {}
         self._tick_pending = False
         self._squant_bp: Dict[StreamId, Any] = {}
+        # the elastic placement plane's per-run state: current per-stream
+        # site (seeded from the deployment's static pins), the live topic
+        # registrations per stream (so a migration can unsubscribe exactly
+        # what it subscribed), realized migrations, and base worker counts
+        # (restored after the run so one topology object is reusable)
+        self._stream_site: Dict[StreamId, str] = dict(
+            self.dep.stream_placement)
+        self._stream_subs: Dict[StreamId, List[Tuple[str, str, Any]]] = {}
+        self._migrations: List[Dict[str, Any]] = []
+        self._base_workers: Dict[str, int] = {
+            name: s.workers for name, s in self.topo.sites.items()}
+        self._controller = None
+        if self.elastic:
+            if self.controller_factory is not None:
+                self._controller = self.controller_factory()
+            else:
+                self._controller = PlacementController(
+                    proactive=(self.elastic != "reactive"))
+            self.controller = self._controller
         self._wire()
+
+    def _module_site(self, module: str, sid: Optional[StreamId] = None) -> str:
+        """Where ``module`` runs for stream ``sid``: the stream's current
+        elastic placement when it has one and the module is per-stream
+        migratable, else the deployment's static site."""
+        if (sid is not None and module in STREAM_MODULES
+                and sid in self._stream_site):
+            return self._stream_site[sid]
+        return self.dep.site_of(module, sid)
+
+    def _subscribe_stream(self, sid: StreamId) -> None:
+        """Register the stream's per-stream topic subscriptions at its
+        *current* site (the elastic path's replacement for the one-wildcard-
+        per-module wiring); remembers each registration so a migration can
+        republish them elsewhere."""
+        regs: List[Tuple[str, str, Any]] = []
+        for base, module, fn in (
+                (T_STREAM, "batch_inference", self._on_batch),
+                (T_STREAM, "speed_inference", self._on_speed),
+                (T_BATCH, "hybrid_inference", self._on_part),
+                (T_SPEED, "hybrid_inference", self._on_part),
+                (T_MODEL, "model_sync", self._on_model_sync)):
+            topic = stream_topic(base, sid)
+            site = self._module_site(module, sid)
+            self.bus.subscribe(topic, site, fn)
+            regs.append((topic, site, fn))
+        self._stream_subs[sid] = regs
 
     def _wire(self) -> None:
         dep, bus = self.dep, self.bus
         sub = lambda base, module, fn: bus.subscribe(
             base + "/+", dep.site_of(module), fn)
-        sub(T_STREAM, "batch_inference", self._on_batch)
-        sub(T_STREAM, "speed_inference", self._on_speed)
+        if self.elastic:
+            # per-stream (exact-topic) subscriptions for the migratable
+            # inference chain: delivery order per stream message is the same
+            # as the wildcard path (batch, speed, then the wildcard subs
+            # below), but each stream's handlers live at *its* site and can
+            # be republished on migration
+            for sid in self.ids:
+                self._subscribe_stream(sid)
+        else:
+            sub(T_STREAM, "batch_inference", self._on_batch)
+            sub(T_STREAM, "speed_inference", self._on_speed)
+            sub(T_BATCH, "hybrid_inference", self._on_part)
+            sub(T_SPEED, "hybrid_inference", self._on_part)
+            sub(T_MODEL, "model_sync", self._on_model_sync)
         sub(T_STREAM, "speed_training", self._on_train)
         sub(T_STREAM, "data_sync", self._on_data_sync)
-        sub(T_BATCH, "hybrid_inference", self._on_part)
-        sub(T_SPEED, "hybrid_inference", self._on_part)
         sub(T_HYBRID, "archiving", self._on_archive)
         sub(T_HYBRID, "data_injection", self._on_user)
-        sub(T_MODEL, "model_sync", self._on_model_sync)
         # checksum-failure recovery: the sync site asks the training site to
         # re-publish a corrupted model
         sub(T_RESYNC, "speed_training", self._on_resync)
+        if self._controller is not None:
+            bus.subscribe(T_CTRL, self._ctrl_site_name(), self._on_ctrl_tick)
         if self._serving_enabled:
             # the request plane: stream windows feed the serving contexts,
             # request topics feed the admission queue, responses land back
@@ -1054,18 +1188,14 @@ class FleetBusExecutor(_BusRuntime):
         # the window's arrived streams are at the inference site: one
         # aggregated vmapped dispatch, per-stream results fan back out
         sids = [s for s in self.ids if s in pend]
-        comm = max(m.deliver_time - m.publish_time
-                   for m in pend.values()) + self.cost.ingest_s
         if kind == "batch":
-            stage, topic, site = (self.stages.batch_inference, T_BATCH,
-                                  self.dep.site_of("batch_inference"))
+            stage, topic = self.stages.batch_inference, T_BATCH
             out = stage(fleet={
                 sid: dict(batch_params=self._bp[sid],
                           x=pend[sid].payload["x"])
                 for sid in sids})["fleet"]
         else:
-            stage, topic, site = (self.stages.speed_inference, T_SPEED,
-                                  self.dep.site_of("speed_inference"))
+            stage, topic = self.stages.speed_inference, T_SPEED
             out = stage(fleet={
                 sid: dict(speed_params=self._fleet.state(sid).speed_params,
                           x=pend[sid].payload["x"],
@@ -1074,17 +1204,32 @@ class FleetBusExecutor(_BusRuntime):
         wall = out[sids[0]].wall_s
         module = "batch_inference" if kind == "batch" else "speed_inference"
 
-        def publish_preds():
-            for sid in sids:
-                o = out[sid]
-                self.bus.publish(
-                    stream_topic(topic, sid),
-                    {"stream": sid, "window": w, "kind": kind,
-                     "pred": o["pred"], "wall_s": o.wall_s,
-                     "fallback": o.values.get("fallback", False)},
-                    _nbytes(o["pred"]), site)
+        # fan the per-stream results back out from each stream's *current*
+        # site: under elastic placement the one aggregated dispatch is
+        # unchanged (aggregation happens above placement), but occupancy and
+        # result publishing are accounted per placement group — each group
+        # carries the shared aggregate wall, the same convention the fleet
+        # stages use per stream.  A static run is a single group, identical
+        # to the pre-elastic path.
+        groups: Dict[str, List[StreamId]] = {}
+        for sid in sids:
+            groups.setdefault(self._module_site(module, sid), []).append(sid)
+        for site_name, gsids in groups.items():
+            comm = max(pend[s].deliver_time - pend[s].publish_time
+                       for s in gsids) + self.cost.ingest_s
 
-        self._schedule(module, wall, comm, publish_preds)
+            def publish_preds(gsids=gsids, site_name=site_name):
+                for sid in gsids:
+                    o = out[sid]
+                    self.bus.publish(
+                        stream_topic(topic, sid),
+                        {"stream": sid, "window": w, "kind": kind,
+                         "pred": o["pred"], "wall_s": o.wall_s,
+                         "fallback": o.values.get("fallback", False)},
+                        _nbytes(o["pred"]), site_name)
+
+            self._schedule(module, wall, comm, publish_preds,
+                           site_name=site_name)
 
     def _on_part(self, msg: Message) -> None:
         sid, w = msg.payload["stream"], msg.payload["window"]
@@ -1118,13 +1263,15 @@ class FleetBusExecutor(_BusRuntime):
             t_weight_solve=t_w,
         )
         self._records[(sid, w)] = rec
+        hy_site = self._module_site("hybrid_inference", sid)
         self._schedule(
             "hybrid_inference", wsol.wall_s + hc.wall_s, comm,
             lambda: self.bus.publish(
                 stream_topic(T_HYBRID, sid),
                 {"stream": sid, "window": w, "rmse_hybrid": rec.rmse_hybrid,
                  "w_speed": rec.w_speed},
-                _nbytes(hc["pred"]), self.dep.site_of("hybrid_inference")))
+                _nbytes(hc["pred"]), hy_site),
+            site_name=hy_site)
 
     def _on_train(self, msg: Message) -> None:
         w = msg.payload["window"]
@@ -1220,7 +1367,8 @@ class FleetBusExecutor(_BusRuntime):
         state.prev_y = out["prev_y"]
         state.window = msg.payload["window"]
         self._schedule("model_sync", out.wall_s,
-                       msg.deliver_time - msg.publish_time)
+                       msg.deliver_time - msg.publish_time,
+                       site_name=self._module_site("model_sync", sid))
 
     def _request_resync(self, sid: StreamId, w: int) -> None:
         sent = self._resync_sent.get((sid, w), 0)
@@ -1232,7 +1380,7 @@ class FleetBusExecutor(_BusRuntime):
         self._resync_sent[(sid, w)] = sent + 1
         self.bus.publish(stream_topic(T_RESYNC, sid),
                          {"stream": sid, "window": w}, 64.0,
-                         self.dep.site_of("model_sync"))
+                         self._module_site("model_sync", sid))
 
     def _on_resync(self, msg: Message) -> None:
         cached = self._last_model_pub.get(msg.payload["stream"])
@@ -1250,18 +1398,113 @@ class FleetBusExecutor(_BusRuntime):
         there its installed serving state is gone — every stream falls back
         to the batch model until the next sync lands."""
         self._free.pop(site_name, None)
-        if self.dep.site_of("model_sync") == site_name:
-            for sid in self.ids:
-                st = self._fleet.state(sid)
-                st.speed_params = None
-                st.prev_preds = None
-                st.prev_y = None
-                st.window = -1
+        for sid in self.ids:
+            if self._module_site("model_sync", sid) != site_name:
+                continue
+            st = self._fleet.state(sid)
+            st.speed_params = None
+            st.prev_preds = None
+            st.prev_y = None
+            st.window = -1
 
     def _on_user(self, msg: Message) -> None:
         sid, w = msg.payload["stream"], msg.payload["window"]
         if (sid, w) in self._inject_t:
             self.e2e_s[sid][w] = msg.deliver_time - self._inject_t[(sid, w)]
+
+    # -- the elastic placement plane -----------------------------------------
+
+    def _ctrl_site_name(self) -> str:
+        """Where the placement controller runs: the training site — the one
+        place with a fleet-global view (and, under the integrated
+        deployment, the cloud)."""
+        return self.dep.site_of("speed_training")
+
+    def _drift_hotness(self, sid: StreamId, recent: int = 4) -> float:
+        """Fraction of the stream's recent training windows the DriftGate
+        actually retrained.  Without a gate there is no drift *signal* — the
+        fleet retrains unconditionally — so hotness is 0, not 1: migration
+        then keys off queue depth alone."""
+        if self.gate is None:
+            return 0.0
+        log = self._retrain_log.get(sid, [])[-recent:]
+        return float(np.mean(log)) if log else 0.0
+
+    def _serving_queue_s(self) -> Dict[StreamId, float]:
+        """Seconds of serving work queued in the request plane, per stream:
+        each submitted-but-unadmitted query costs one slot-share of a
+        serving tick's wall (the last measured/fixed tick).  This is the
+        queue the site worker pool cannot see — the request plane admits at
+        tick boundaries (one tick in flight), so a saturated serving site
+        piles its backlog up *here* first, not in the pool."""
+        out: Dict[StreamId, float] = {sid: 0.0 for sid in self.ids}
+        if not self._serving_enabled:
+            return out
+        walls = self.ledger.comp.get("serving", [])
+        per_q = (walls[-1] if walls else 0.0) / max(self.serve_slots, 1)
+        for q in self._qplane.sched.queue:
+            out[q.stream] = out.get(q.stream, 0.0) + per_q
+        return out
+
+    def _on_ctrl_tick(self, msg: Message) -> None:
+        """One control interval: snapshot site/stream signals, run the
+        controller policy, apply worker scaling and migrations.  Controller
+        compute is accounted straight to the ledger (``stage_costs`` can fix
+        it for byte-identical replay) without occupying a pool worker — the
+        control plane must not perturb the data plane it is observing."""
+        ctl = self._controller
+        if ctl is None:
+            return
+        t = self.kernel.now
+        qdepth = self._serving_queue_s()
+        serve_site = (self._serving_site_name() if self._serving_enabled
+                      else None)
+        sites = [SiteSignal(name=s.name, kind=s.kind, workers=s.workers,
+                            base_workers=self._base_workers[s.name],
+                            backlog_s=self._backlog_s(s.name)
+                            + (sum(qdepth.values())
+                               if s.name == serve_site else 0.0))
+                 for s in self.topo.sites.values()]
+        for s in sites:
+            self.ledger.sample_depth(s.name, t, s.backlog_s)
+        streams = []
+        for sid in self.ids:
+            site = self._module_site("speed_inference", sid)
+            streams.append(StreamSignal(
+                sid=sid, site=site, drift_hot=self._drift_hotness(sid),
+                queue_s=self._backlog_s(site) + qdepth[sid]))
+        t0 = time.perf_counter()
+        dec = ctl.step(t, sites, streams)
+        wall = time.perf_counter() - t0
+        sc = self.stage_costs or {}
+        self.ledger.add("placement_controller",
+                        comp_s=sc.get("placement_controller", wall))
+        for name, workers in dec.workers.items():
+            self.topo.sites[name].workers = workers
+        for sid, target in dec.migrations.items():
+            self._migrate(sid, target, t)
+
+    def _migrate(self, sid: StreamId, target: str, t: float) -> None:
+        """Move one stream's inference chain to ``target``: republish its
+        per-stream topic subscriptions at the new site and hand its
+        device-resident state across (``FleetState.handoff`` materializes
+        the lazy bucket-resident params view into bytes the new site owns;
+        the transfer rides the inter-site link in the ledger).  In-flight
+        messages matched before the move still run their handler — nothing
+        is dropped; new publishes route to the new site."""
+        old = self._module_site("speed_inference", sid)
+        if target == old:
+            return
+        nbytes = self._fleet.handoff(sid)
+        for topic, site, fn in self._stream_subs.get(sid, []):
+            self.bus.unsubscribe(topic, site, fn)
+        self._stream_site[sid] = target
+        self._subscribe_stream(sid)
+        self.ledger.add("placement_migration", comp_s=0.0,
+                        comm_s=self.topo.link(old, target)
+                        .transfer_time(nbytes))
+        self._migrations.append({"t": t, "sid": sid, "from": old,
+                                 "to": target, "state_nbytes": nbytes})
 
     # -- the request plane ---------------------------------------------------
 
@@ -1455,6 +1698,23 @@ class FleetBusExecutor(_BusRuntime):
         srv = self.stages.serving
         ticks0 = srv.ticks if srv is not None else 0
         sdisp0 = srv.dispatches if srv is not None else 0
+        bi, si = self.stages.batch_inference, self.stages.speed_inference
+        infer0 = {"batch": (bi.ticks, bi.dispatches),
+                  "speed": (si.ticks, si.dispatches)}
+
+        if self._controller is not None:
+            # the control-plane beat: a periodic ctrl/tick publish the
+            # controller subscribes to at its site (loopback delivery), for
+            # the duration of the run
+            interval = self.control_interval_s or 0.5 * self.period
+            ctrl_site = self._ctrl_site_name()
+            k = 1
+            while k * interval <= n * self.period + interval:
+                self.kernel.at(
+                    k * interval,
+                    lambda k=k: self.bus.publish(
+                        T_CTRL, {"tick": k}, 64.0, ctrl_site))
+                k += 1
 
         for sid in ids:
             injector = BusInjector(self.kernel, self.bus, T_STREAM,
@@ -1514,6 +1774,38 @@ class FleetBusExecutor(_BusRuntime):
                     for (s, w) in sorted(self._records) if s == sid]
             results[sid] = HybridRunResult(records=recs,
                                            mode=str(self.stages.mode))
+
+        placement = None
+        if self._controller is not None:
+            # report the realized worker history, then restore the base
+            # counts so one Topology object can host the next run unchanged
+            final_workers = {name: s.workers
+                             for name, s in self.topo.sites.items()}
+            for name, wk in self._base_workers.items():
+                self.topo.sites[name].workers = wk
+            placement = {
+                "mode": ("reactive" if self.elastic == "reactive"
+                         else "proactive"),
+                "control_interval_s": (self.control_interval_s
+                                       or 0.5 * self.period),
+                "controller": self._controller.stats(),
+                "migrations": list(self._migrations),
+                "stream_site": {
+                    sid: self._module_site("speed_inference", sid)
+                    for sid in ids},
+                "base_workers": dict(self._base_workers),
+                "final_workers": final_workers,
+            }
+        from repro.training.compiled import materialize_params
+        final_params = {}
+        for sid in ids:
+            p = self._fleet.state(sid).speed_params
+            final_params[sid] = (materialize_params(p) if p is not None
+                                 else None)
+        infer_dispatches = {
+            kind: {"ticks": st.ticks - infer0[kind][0],
+                   "dispatches": st.dispatches - infer0[kind][1]}
+            for kind, st in (("batch", bi), ("speed", si))}
         chaos = None
         if fp is not None:
             chaos = {
@@ -1541,4 +1833,7 @@ class FleetBusExecutor(_BusRuntime):
             serving=serving_stats,
             dead_letters=list(self.bus.dead_letters),
             chaos=chaos,
+            placement=placement,
+            infer_dispatches=infer_dispatches,
+            final_params=final_params,
         )

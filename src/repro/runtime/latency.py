@@ -48,17 +48,41 @@ class LatencyLedger:
     """Accumulates (computation, communication, queue) seconds per (module,
     window).  ``queue`` is the time a stage waited for a free worker on its
     site (only the measured ``BusExecutor`` path produces nonzero queueing;
-    the calibrated simulation does not model site occupancy)."""
+    the calibrated simulation does not model site occupancy).
+
+    ``depth`` is a per-*site* backlog time series — ``(t, backlog_s)``
+    samples of how many seconds of already-admitted work sit in front of a
+    fresh arrival.  Executors sample it both at stage entry *and* at publish
+    (stage-exit) time: entry-only sampling aliased inter-window queue growth
+    to zero, which starved the placement controller (and BENCH_serving) of
+    the very signal scaling decisions are made from."""
 
     comp: Dict[str, list] = field(default_factory=dict)
     comm: Dict[str, list] = field(default_factory=dict)
     queue: Dict[str, list] = field(default_factory=dict)
+    depth: Dict[str, list] = field(default_factory=dict)
 
     def add(self, module: str, comp_s: float = 0.0, comm_s: float = 0.0,
             queue_s: float = 0.0):
         self.comp.setdefault(module, []).append(comp_s)
         self.comm.setdefault(module, []).append(comm_s)
         self.queue.setdefault(module, []).append(queue_s)
+
+    def sample_depth(self, site: str, t: float, backlog_s: float) -> None:
+        """Record one (virtual-time, backlog-seconds) queue-depth sample for
+        ``site``."""
+        self.depth.setdefault(site, []).append((float(t), float(backlog_s)))
+
+    def depth_series(self, site: str) -> list:
+        return self.depth.get(site, [])
+
+    def depth_ewma(self, site: str, alpha: float = 0.3) -> float:
+        """EWMA of the site's backlog samples (most recent weighted by
+        ``alpha``); 0.0 when no samples exist."""
+        ewma = 0.0
+        for _, b in self.depth.get(site, []):
+            ewma = (1.0 - alpha) * ewma + alpha * b
+        return ewma
 
     def table(self) -> Dict[str, Dict[str, float]]:
         out = {}

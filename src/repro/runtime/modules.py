@@ -35,6 +35,7 @@ T_ARCHIVE = "archive/put"
 T_REQUEST = "serve/request"
 T_RESPONSE = "serve/response"
 T_RESYNC = "model/rerequest"
+T_CTRL = "ctrl/tick"  # the elastic placement controller's control-plane beat
 
 
 def stream_topic(base: str, stream_id: str) -> str:
