@@ -181,8 +181,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (fewer streams/windows)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="host devices to expose to XLA (default: the "
+                         "machine's core count); the fleet's stream axis "
+                         "shards across them")
     ap.add_argument("--out", default="BENCH_elastic.json")
     args = ap.parse_args()
+
+    # before the first lazy jax import below: give the fleet a mesh
+    from benchmarks._device_env import ensure_host_devices
+    ensure_host_devices(args.devices)
 
     res = run(args.smoke)
     with open(args.out, "w") as f:

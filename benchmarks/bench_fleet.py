@@ -35,6 +35,22 @@ This benchmark pins the fleet properties the executors rely on:
   *skip* retrains (>0, counted), and the abrupt fleet's gated accuracy must
   track the every-window accuracy within tolerance.
 
+* ``batch_refresh`` — the cloud-side heavy-retraining path riding the same
+  sharded dispatch: a gated run with a ``BatchRefresh`` stage (batch models
+  retrained from archived drifted windows on a cadence, one fleet dispatch
+  per refresh round) vs the same run without, refresh dispatch accounting
+  CI-gated.
+
+* ``weak_scaling`` — the thousand-stream sweep: wall/stream and dispatch
+  overhead at S x device-count cells, each cell a fresh subprocess with its
+  XLA device count pinned (``benchmarks._device_env.subprocess_env``; the
+  count is fixed at backend init, so a sweep cannot run in-process).  Every
+  cell must hold one dispatch per window and zero retraces after its first
+  window; sampled streams must match the unsharded sequential path to 1e-6
+  and agree across device counts; and wall/stream at the largest S must
+  stay within 1.5x of the 8-stream baseline (overhead amortizes, compute
+  weak-scales).
+
 The process exposes the host's cores as XLA devices
 (``--xla_force_host_platform_device_count``) before touching jax, so the
 fleet paths shard their stream axis across the mesh — the configuration a
@@ -48,8 +64,12 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
+import sys
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
+
+from benchmarks._device_env import ensure_host_devices, subprocess_env
 
 
 def _fleet_streams(n_streams: int, n_windows: int, records_per_window: int,
@@ -301,9 +321,212 @@ def _bench_drift_gated(cfg, bp, n_streams: int, n_windows: int,
     return out
 
 
+def _bench_batch_refresh(cfg, bp, n_streams: int, n_windows: int,
+                         records_per_window: int, epochs: int,
+                         batch_size: int, key) -> Dict:
+    """The cloud-side heavy-retraining path riding the fleet dispatch: a
+    drift-gated run with a ``BatchRefresh`` stage (batch models retrained
+    from archived drifted windows, one sharded fleet dispatch per refresh
+    round) against the same gated run without one, on the abrupt
+    scenario."""
+    from repro.core import FleetStages, lstm_fleet_forecaster
+    from repro.core.drift import DriftGate
+    from repro.core.stages import BatchRefresh
+    from repro.runtime import InProcessFleetExecutor
+
+    streams, _ = _fleet_streams(n_streams, n_windows, records_per_window,
+                                "abrupt")
+    runs = {}
+    for label in ("gated", "gated_refresh"):
+        ff = lstm_fleet_forecaster(cfg, epochs=epochs, batch_size=batch_size)
+        rf = (BatchRefresh(ff, every=2, min_windows=2)
+              if label == "gated_refresh" else None)
+        ex = InProcessFleetExecutor(FleetStages.build(ff, mode="dynamic"),
+                                    gate=DriftGate(), batch_refresh=rf)
+        runs[label] = ex.run(streams, bp, key)
+    base, ref = runs["gated"], runs["gated_refresh"]
+    rounds = max(ref.refresh["rounds"], 1)
+    return {
+        "refresh": ref.refresh,
+        "dispatches_per_round": ref.refresh["dispatches"] / rounds,
+        "train_dispatches": ref.train_dispatches,
+        "train_dispatches_baseline": base.train_dispatches,
+        "n_windows": ref.n_windows,
+        "hybrid_rmse_refresh": ref.mean_rmse()["hybrid"],
+        "hybrid_rmse_baseline": base.mean_rmse()["hybrid"],
+        "batch_rmse_refresh": ref.mean_rmse()["batch"],
+        "batch_rmse_baseline": base.mean_rmse()["batch"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Weak scaling: wall/stream and dispatch overhead, S x devices, one
+# subprocess per cell (XLA fixes its device count at backend init)
+# ---------------------------------------------------------------------------
+
+
+def _weak_cell(spec: Dict) -> Dict:
+    """One (n_streams, devices) cell, run inside a child process whose XLA
+    device count the parent pinned via ``subprocess_env``: W windows of the
+    one-dispatch fleet fit over synthetic per-stream windows (deterministic
+    per (seed, stream, window) — identical data in every cell), plus the
+    two per-cell correctness probes the sweep gates on:
+
+    * parity vs the unsharded path — sampled streams (first/middle/last)
+      refit sequentially through ``CompiledForecaster`` with the same keys;
+    * probe predictions — the sampled streams' materialized params predict
+      a fixed probe batch, serialized so the parent can compare the *same*
+      stream's prediction across device counts."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core import lstm_fleet_forecaster, lstm_forecaster
+    from repro.runtime import fleet_key_chains
+    from repro.training.compiled import (
+        bucket_streams,
+        materialize_params,
+        stream_mesh_devices,
+    )
+
+    S, W = spec["n_streams"], spec["n_windows"]
+    n, epochs, bs = spec["examples"], spec["epochs"], spec["batch_size"]
+    seed = spec["seed"]
+    cfg = get_config("lstm-paper")
+    ids = [f"s{i:04d}" for i in range(S)]
+    keys = fleet_key_chains(jax.random.PRNGKey(seed), ids, W)
+
+    def window(i, w):
+        rng = np.random.default_rng(seed * 1_000_003 + i * 9176 + w)
+        x = rng.normal(0, 1, (n, 5, 5)).astype(np.float32)
+        y = x[:, :, 0].mean(axis=1, keepdims=True).astype(np.float32)
+        return {"x": x, "y": y}
+
+    ff = lstm_fleet_forecaster(cfg, epochs=epochs, batch_size=bs)
+    walls, last_params = [], None
+    for w in range(W):
+        datas = [window(i, w) for i in range(S)]
+        wkeys = [keys[sid][w] for sid in ids]
+        t0 = time.perf_counter()
+        last_params, _ = ff.train_fleet(datas, wkeys)
+        walls.append(time.perf_counter() - t0)
+
+    sample = sorted({0, S // 2, S - 1})
+    parity, w = 0.0, W - 1
+    for i in sample:
+        fc = lstm_forecaster(cfg, epochs=epochs, batch_size=bs)
+        sp, _ = fc.train(window(i, w), None, keys[ids[i]][w])
+        for a, b in zip(jax.tree_util.tree_leaves(sp),
+                        jax.tree_util.tree_leaves(last_params[i])):
+            parity = max(parity, float(np.max(np.abs(
+                np.asarray(a) - np.asarray(b)))))
+
+    probe_rng = np.random.default_rng(seed + 777_777)
+    probe_x = probe_rng.normal(0, 1, (4, 5, 5)).astype(np.float32)
+    probe = [np.asarray(ff.single.predict(
+        materialize_params(last_params[i]), probe_x)).tolist()
+        for i in sample]
+
+    steady = walls[1:] if len(walls) > 1 else walls
+    med = sorted(steady)[len(steady) // 2]
+    sb = bucket_streams(S)
+    return {
+        "n_streams": S,
+        "devices": jax.device_count(),
+        "mesh_devices": len(stream_mesh_devices(sb)),
+        "stream_bucket": sb,
+        "per_window_wall_s": walls,
+        "steady_state_median_s": med,
+        "wall_per_stream_steady_s": med / S,
+        "dispatches": ff.train_dispatches,
+        "dispatches_per_window": ff.train_dispatches / W,
+        "executables": len(ff.trace_counts()),
+        "retraces_after_first_window": (ff.retrace_count
+                                        - len(ff.trace_counts())),
+        "parity_streams": sample,
+        "parity_max_abs_diff": parity,
+        "probe_preds": probe,
+    }
+
+
+def _run_weak_cell(spec: Dict, n_devices: int) -> Dict:
+    """Launch one sweep cell in a fresh process with its device count
+    pinned, and parse the cell JSON it prints."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = subprocess_env(n_devices)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_fleet",
+         "--weak-cell", json.dumps(spec)],
+        env=env, cwd=root, capture_output=True, text=True)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"weak-scaling cell {spec} on {n_devices} device(s) failed:\n"
+            f"{proc.stderr[-2000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def _bench_weak_scaling(streams_list: List[int], devices_list: List[int],
+                        *, n_windows: int = 5, epochs: int = 2,
+                        batch_size: int = 32, examples: int = 32,
+                        seed: int = 0) -> Dict:
+    """The thousand-stream weak-scaling sweep: every (S, devices) cell in
+    its own process (XLA fixes the device count per process), aggregated
+    into the properties CI gates — one dispatch per window at every scale,
+    per-stream parity vs the unsharded path, cross-device probe agreement,
+    and wall/stream at the largest S within 1.5x of the 8-stream
+    baseline."""
+    import numpy as np
+
+    cells = []
+    for d in devices_list:
+        for S in streams_list:
+            spec = dict(n_streams=S, n_windows=n_windows, epochs=epochs,
+                        batch_size=batch_size, examples=examples, seed=seed)
+            cells.append(_run_weak_cell(spec, d))
+    by = {(c["n_streams"], c["devices"]): c for c in cells}
+    base_S, top_S = min(streams_list), max(streams_list)
+    ratios = {
+        str(d): (by[(top_S, d)]["wall_per_stream_steady_s"]
+                 / max(by[(base_S, d)]["wall_per_stream_steady_s"], 1e-12))
+        for d in devices_list}
+    cross = {}
+    for S in streams_list:
+        preds = [np.asarray(by[(S, d)]["probe_preds"], dtype=np.float64)
+                 for d in devices_list]
+        cross[str(S)] = (float(max(np.max(np.abs(p - preds[0]))
+                                   for p in preds[1:]))
+                         if len(preds) > 1 else 0.0)
+    return {
+        "streams": streams_list,
+        "devices": devices_list,
+        "cell_config": {"n_windows": n_windows, "epochs": epochs,
+                        "batch_size": batch_size,
+                        "examples_per_window": examples, "seed": seed},
+        "cells": cells,
+        "wall_per_stream_steady_s": {
+            str(d): {str(S): by[(S, d)]["wall_per_stream_steady_s"]
+                     for S in streams_list}
+            for d in devices_list},
+        "weak_scaling_ratio": ratios,
+        "weak_scaling_ratio_worst": max(ratios.values()),
+        "dispatches_per_window_max": max(c["dispatches_per_window"]
+                                         for c in cells),
+        "retraces_after_first_window_total": sum(
+            c["retraces_after_first_window"] for c in cells),
+        "parity_max_abs_diff": max(c["parity_max_abs_diff"] for c in cells),
+        "cross_device_probe_max_abs_diff": cross,
+        "cross_device_probe_worst": max(cross.values()),
+    }
+
+
 def run(n_streams: int = 8, n_windows: int = 8,
         records_per_window: int = 250, epochs: int = 10,
-        batch_size: int = 64) -> Dict:
+        batch_size: int = 64,
+        weak_streams: Optional[List[int]] = None,
+        weak_devices: Optional[List[int]] = None) -> Dict:
     import jax
 
     from repro.configs import get_config
@@ -336,6 +559,12 @@ def run(n_streams: int = 8, n_windows: int = 8,
         "drift_gated": _bench_drift_gated(cfg, bp, n_streams, n_windows,
                                           records_per_window, epochs,
                                           batch_size, key),
+        "batch_refresh": _bench_batch_refresh(cfg, bp, n_streams, n_windows,
+                                              records_per_window, epochs,
+                                              batch_size, key),
+        "weak_scaling": _bench_weak_scaling(
+            weak_streams or [8, 64, 256, 1024],
+            weak_devices or [1, 2, 4, 8]),
     }
 
 
@@ -400,6 +629,41 @@ def report(res: Dict) -> str:
             f"{d['hybrid_rmse_gated']:.4f} vs "
             f"{d['hybrid_rmse_every_window']:.4f} "
             f"(ratio {d['hybrid_rmse_ratio']:.3f})")
+    br = res["batch_refresh"]
+    lines += [
+        "",
+        "# batch-model refresh from archived drifted windows (abrupt)",
+        f"rounds {br['refresh']['rounds']}, dispatches "
+        f"{br['refresh']['dispatches']} "
+        f"({br['dispatches_per_round']:.2f}/round), refreshed streams "
+        f"{sorted(br['refresh']['refreshed'])}",
+        f"batch RMSE {br['batch_rmse_refresh']:.4f} vs "
+        f"{br['batch_rmse_baseline']:.4f} unrefreshed; hybrid "
+        f"{br['hybrid_rmse_refresh']:.4f} vs "
+        f"{br['hybrid_rmse_baseline']:.4f}",
+        "",
+        "# weak scaling (one subprocess per cell; wall/stream, steady "
+        "median)",
+    ]
+    ws = res["weak_scaling"]
+    lines.append(f"{'streams':<10}" + "".join(
+        f"{str(d) + ' dev (ms)':>14}" for d in ws["devices"]))
+    for S in ws["streams"]:
+        row = f"{S:<10}"
+        for d in ws["devices"]:
+            wps = ws["wall_per_stream_steady_s"][str(d)][str(S)]
+            row += f"{wps * 1e3:>14.3f}"
+        lines.append(row)
+    lines += [
+        f"weak-scaling ratio (wall/stream at S={max(ws['streams'])} vs "
+        f"S={min(ws['streams'])}): worst "
+        f"{ws['weak_scaling_ratio_worst']:.3f} across device counts",
+        f"dispatches/window max {ws['dispatches_per_window_max']:.2f}, "
+        f"retraces after first window {ws['retraces_after_first_window_total']}",
+        f"parity vs unsharded path: {ws['parity_max_abs_diff']:.2e}; "
+        f"cross-device probe agreement: "
+        f"{ws['cross_device_probe_worst']:.2e}",
+    ]
     return "\n".join(lines)
 
 
@@ -416,23 +680,25 @@ def main() -> None:
                    help="host devices to expose to XLA (default: the "
                         "machine's core count); the fleet paths shard "
                         "their stream axis across them")
+    p.add_argument("--weak-cell", default=None, metavar="SPEC_JSON",
+                   help=argparse.SUPPRESS)  # sweep child-process mode
     p.add_argument("--out", default="BENCH_fleet.json")
     args = p.parse_args()
 
+    if args.weak_cell is not None:
+        # child of the weak-scaling sweep: the parent pinned the device
+        # count in our environment; print the cell JSON and nothing else
+        print(json.dumps(_weak_cell(json.loads(args.weak_cell))))
+        return
+
     # must land before the first (lazy) jax import anywhere below: expose
     # the cores as XLA devices so the fleet's stream axis has a mesh
-    # (appended to any inherited XLA_FLAGS; an inherited device-count flag
-    # wins so an outer harness can still pin it)
-    n_dev = args.devices or os.cpu_count() or 1
-    flags = os.environ.get("XLA_FLAGS", "")
-    if "xla_force_host_platform_device_count" not in flags:
-        os.environ["XLA_FLAGS"] = (
-            (flags + " " if flags else "")
-            + f"--xla_force_host_platform_device_count={n_dev}")
+    ensure_host_devices(args.devices)
 
     if args.smoke:
         defaults = dict(n_streams=4, n_windows=4, epochs=3,
-                        records_per_window=120)
+                        records_per_window=120,
+                        weak_streams=[8, 64, 1024], weak_devices=[1, 2])
     else:
         defaults = dict(n_streams=8, n_windows=8, epochs=10,
                         records_per_window=250)

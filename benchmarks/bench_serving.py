@@ -209,8 +209,16 @@ def main() -> None:
     p.add_argument("--windows", type=int, default=None)
     p.add_argument("--qps", type=float, default=None)
     p.add_argument("--slots", type=int, default=None)
+    p.add_argument("--devices", type=int, default=None,
+                   help="host devices to expose to XLA (default: the "
+                        "machine's core count); the serving fleet's stream "
+                        "axis shards across them")
     p.add_argument("--out", default="BENCH_serving.json")
     args = p.parse_args()
+
+    # before the first lazy jax import below: give the fleet a mesh
+    from benchmarks._device_env import ensure_host_devices
+    ensure_host_devices(args.devices)
 
     if args.smoke:
         defaults = dict(n_streams=3, n_windows=3, records_per_window=120,

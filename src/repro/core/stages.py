@@ -28,7 +28,9 @@ objects over a ``StreamId``-keyed axis — ``FleetState`` holds each stream's
 serving-side state, ``FleetStage`` maps a single-stream stage over a
 ``{stream_id: kwargs}`` dict, and ``FleetSpeedTraining`` replaces the
 per-stream training loop with one vmapped whole-fleet dispatch
-(``repro.training.compiled.FleetForecaster``).  The fleet executors
+(``repro.training.compiled.FleetForecaster``), and ``BatchRefresh`` rides
+the same sharded dispatch for the queued cloud-side *batch-model* refresh
+from archived drifted windows.  The fleet executors
 (``InProcessFleetExecutor`` / ``FleetBusExecutor``) drive ``FleetStages``;
 the single-stream executors keep driving ``PipelineStages``.
 """
@@ -517,6 +519,86 @@ class ServingStage(Stage):
         self.dispatches += (d1 - d0) if len(xs) > 1 else 1
         self.ticks += 1
         return {"preds": preds}
+
+
+class BatchRefresh(Stage):
+    """The queued cloud-side heavy-retraining path: gated *batch-model*
+    refresh from archived drifted windows, riding the same sharded fleet
+    dispatch as speed training.
+
+    Every window whose drift gate fired is archived per stream (a bounded
+    deque of supervised windows — drifted data is exactly what the serving
+    batch model has gone stale on).  Every ``every`` windows, streams whose
+    archive holds at least ``min_windows`` windows refresh together: each
+    stream's archive concatenates into one training set and the whole
+    cohort retrains in **one** ``FleetForecaster.train_fleet`` dispatch —
+    stream-count-bucketed, mesh-sharded, donation-cached, exactly the hot
+    path — instead of S sequential cloud fits.  The refreshed params
+    replace that stream's batch model for every subsequent batch-inference
+    dispatch and Algorithm-1 weight solve; its archive is consumed.
+
+    Archives are capped at ``max_windows`` (most recent kept), which also
+    bounds the refresh's example-count bucket so the dispatch reuses a
+    handful of executables rather than compiling per archive size."""
+
+    name = "batch_refresh"
+
+    def __init__(self, fleet_forecaster, *, every: int = 4,
+                 min_windows: int = 2, max_windows: int = 8):
+        if every <= 0:
+            raise ValueError(f"refresh period must be positive, got {every}")
+        self.forecaster = fleet_forecaster
+        self.every = every
+        self.min_windows = max(min_windows, 1)
+        self.max_windows = max(max_windows, self.min_windows)
+        self._archive: Dict[StreamId, List[Dict[str, np.ndarray]]] = {}
+        self.dispatches = 0
+        self.rounds = 0
+        self.refreshed: Dict[StreamId, int] = {}
+        self.train_wall_s = 0.0
+
+    def reset(self) -> None:
+        """Per-run state: clear the archives and the run counters."""
+        self._archive.clear()
+        self.refreshed = {}
+        self.dispatches = 0
+        self.rounds = 0
+        self.train_wall_s = 0.0
+
+    def archive(self, sid: StreamId, data: Dict[str, np.ndarray]) -> None:
+        """Queue one drifted window of stream ``sid`` for its next refresh."""
+        if len(next(iter(data.values()))) == 0:
+            return
+        q = self._archive.setdefault(sid, [])
+        q.append({k: np.asarray(v) for k, v in data.items()})
+        if len(q) > self.max_windows:
+            del q[: len(q) - self.max_windows]
+
+    def due(self, t: int) -> bool:
+        return (t + 1) % self.every == 0
+
+    def ready(self) -> List[StreamId]:
+        return [s for s, q in self._archive.items()
+                if len(q) >= self.min_windows]
+
+    def compute(self, *, keys: Dict[StreamId, Any]) -> Dict[str, Any]:
+        fc = self.forecaster
+        sids = [s for s in self.ready() if s in keys]
+        if not sids:
+            return {"fleet": {}, "train_wall_s": 0.0}
+        datas = []
+        for s in sids:
+            q = self._archive[s]
+            datas.append({k: np.concatenate([w[k] for w in q]) for k in q[0]})
+        d0 = fc.train_dispatches
+        params_list, wall = fc.train_fleet(datas, [keys[s] for s in sids])
+        self.dispatches += fc.train_dispatches - d0
+        self.rounds += 1
+        self.train_wall_s += wall
+        for s in sids:
+            self._archive[s] = []
+            self.refreshed[s] = self.refreshed.get(s, 0) + 1
+        return {"fleet": dict(zip(sids, params_list)), "train_wall_s": wall}
 
 
 @dataclass

@@ -19,15 +19,28 @@ mesh axis is never used twice in one spec (first dim wins) — e.g. grok-1's 8
 experts cannot split a 16-way model axis, so experts replicate and the expert
 FFN keeps tensor parallelism; kimi-k2's 384 experts take the model axis and
 its tiny per-expert FFN stays unsharded.
+
+* **The stream mesh** — the fleet hot path (``training/compiled.py``)
+  stacks S independent streams along a leading axis and shards it across
+  the local devices: pure data parallelism, bitwise-identical per-stream
+  numerics.  ``stream_mesh(sb)`` builds the 1-D mesh (capped at the
+  largest power-of-two divisor of the stream bucket, so a 2-stream bucket
+  on an 8-device host gets a 2-device mesh rather than an indivisible
+  sharding), ``stream_sharding(sb)`` resolves the stacked-batch spec
+  through the same divisibility-aware ``logical_to_spec``, and
+  ``fleet_param_shardings`` derives the stacked params/opt-state specs
+  leaf-wise (leading ``stream`` axis sharded, per-stream LSTM leaves
+  replicated per ``PARAM_AXES``).
 """
 from __future__ import annotations
 
 import threading
 from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # logical name -> preferred mesh axis names (in priority order, used jointly
@@ -47,6 +60,9 @@ DEFAULT_RULES: Rules = {
     "embed": (),
     "stack": (),  # scan-stacked layer dim
     "state": (),
+    # the fleet's stacked stream axis (training/compiled.py): independent
+    # streams, sharded data-parallel over the 1-D stream mesh
+    "stream": ("stream",),
 }
 
 
@@ -252,3 +268,98 @@ def spec_tree(params, mesh: Mesh, rules: Optional[AxisRules] = None):
         return logical_to_spec(names, x.shape, mesh, rules)
 
     return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# The stream mesh: the fleet hot path's stacked stream axis
+# ---------------------------------------------------------------------------
+
+STREAM_AXIS = "stream"
+
+
+def largest_pow2_divisor(n: int) -> int:
+    """The largest power of two dividing ``n`` (n & -n)."""
+    if n <= 0:
+        raise ValueError(f"need a positive dim, got {n}")
+    return n & -n
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (max(n, 1).bit_length() - 1)
+
+
+def stream_mesh_size(sb: int, n_devices: int) -> int:
+    """How many local devices the stacked stream axis of bucket ``sb``
+    shards over: the largest power of two that both divides ``sb`` and fits
+    the device count.  Pure arithmetic so the awkward cases are unit-
+    testable without reconfiguring XLA: a bucket *smaller* than the host's
+    device count (2 streams on 8 devices) caps at the bucket's own pow2
+    divisor instead of producing an indivisible sharding, a non-pow2
+    device count (6 host cores) uses its pow2 floor, and a non-pow2 bucket
+    (nothing upstream produces one today, but nothing here assumes that)
+    caps at *its* pow2 divisor."""
+    return min(largest_pow2_divisor(sb), _pow2_floor(n_devices))
+
+
+def stream_mesh(sb: int, devices: Optional[Sequence[Any]] = None
+                ) -> Optional[Mesh]:
+    """The 1-D ``("stream",)`` mesh for stream bucket ``sb`` over the local
+    devices (or an explicit device list), or ``None`` when it would be a
+    single device (no sharding: the tests' one-CPU configuration)."""
+    devs = list(devices) if devices is not None else jax.devices()
+    d = stream_mesh_size(sb, len(devs))
+    if d <= 1:
+        return None
+    return Mesh(np.asarray(devs[:d]), (STREAM_AXIS,))
+
+
+def stream_batch_spec(sb: int, mesh: Mesh,
+                      rules: Optional[AxisRules] = None) -> P:
+    """The stacked-batch PartitionSpec for a leading stream axis of ``sb``,
+    resolved through the divisibility-aware ``logical_to_spec`` (an
+    indivisible bucket degrades to replicated instead of erroring);
+    trailing per-stream dims replicate."""
+    return logical_to_spec((STREAM_AXIS,), (sb,), mesh, rules)
+
+
+def stream_sharding(sb: int, devices: Optional[Sequence[Any]] = None,
+                    rules: Optional[AxisRules] = None
+                    ) -> Optional[NamedSharding]:
+    """The ``NamedSharding`` every stacked fleet tensor of stream bucket
+    ``sb`` carries — staged batches, init/perm key rows, the donated
+    opt-state carry, the fit's stacked params output, and the
+    ``predict_fleet`` serving batch all resolve through this one helper —
+    or ``None`` on a single device."""
+    mesh = stream_mesh(sb, devices)
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, stream_batch_spec(sb, mesh, rules))
+
+
+def fleet_param_shardings(stacked, mesh: Mesh,
+                          rules: Optional[AxisRules] = None):
+    """NamedSharding pytree for a *stacked* fleet params/opt-state tree
+    (leading stream-bucket axis): the stream axis shards per the rules and
+    the trailing per-stream axes resolve through ``PARAM_AXES`` (the LSTM
+    forecaster's leaves are registered replicated — each stream's whole
+    model lives on its shard).  Leaves without a ``PARAM_AXES`` entry (an
+    optimizer's step counter, loss trajectories) replicate their trailing
+    dims."""
+    rules = rules or AxisRules()
+
+    def one(path, x):
+        try:
+            trailing = param_axes_for(_path_str(path), x.ndim - 1)
+        except KeyError:
+            trailing = (None,) * (x.ndim - 1)
+        names = (STREAM_AXIS,) + tuple(trailing)
+        return NamedSharding(mesh, logical_to_spec(names, x.shape, mesh,
+                                                   rules))
+
+    return jax.tree_util.tree_map_with_path(one, stacked)
+
+
+def fleet_rules() -> AxisRules:
+    """The axis rules the fleet hot path trains/serves under (the default
+    table: ``stream`` -> the stream mesh axis, model dims replicated)."""
+    return AxisRules()

@@ -55,9 +55,22 @@ The fleet hot path is memory-resident across windows:
   ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` as
   ``benchmarks/bench_fleet.py`` does), the stacked stream axis is sharded
   across the largest power-of-two device prefix that divides the stream
-  bucket.  Per-stream numerics are bitwise identical to the single-device
-  vmap — streams never interact — but the fleet fit and the fleet predict
-  run data-parallel across the mesh.
+  bucket.  All of it — the mesh, the stacked-batch sharding, and the
+  leaf-wise shardings of the donated opt-state carry — resolves through
+  ``repro.distributed.sharding``'s logical-axis rules (``stream_mesh`` /
+  ``stream_sharding`` / ``fleet_param_shardings``), the same
+  divisibility-aware table the model zoo shards under, so staged host
+  buffers, the fit executable, and ``predict_fleet`` serving all carry
+  explicit shardings from one place.  Per-stream numerics are bitwise
+  identical to the single-device vmap — streams never interact — but the
+  fleet fit and the fleet predict run data-parallel across the mesh.
+* **O(1) host dispatches per window** — the per-stream init/perm key
+  derivation (``split``/``fold_in`` per stream, O(S) device round-trips)
+  is one batched jitted dispatch over the stacked key rows, and per-stream
+  param materialization (a publish boundary, a byte count) is one
+  ``device_get`` of the stacked tree that every sibling
+  :class:`FleetParamView` slices from, instead of S separate
+  slice-and-transfer chains.
 
 ``predict_fleet`` is the serving-side counterpart of ``train_fleet``: the
 whole fleet's per-stream predictions in **one** vmapped dispatch, cached
@@ -74,8 +87,13 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec
+from jax.sharding import NamedSharding
 
+from repro.distributed.sharding import (
+    fleet_param_shardings,
+    stream_mesh_size,
+    stream_sharding,
+)
 from repro.models.model import Model
 from repro.training.optimizer import Optimizer, adamw
 from repro.training.train_loop import make_train_step
@@ -128,30 +146,40 @@ def bucket_streams(s: int) -> int:
 
 
 def stream_mesh_devices(sb: int) -> List[Any]:
-    """The largest power-of-two prefix of the local devices that divides the
-    stream bucket ``sb`` — the mesh the fleet's stacked stream axis shards
-    over.  One device (the tests' configuration) degrades to no sharding;
-    stream buckets are powers of two, so any pow2 device count divides any
-    bucket at least as large."""
+    """The device prefix the fleet's stacked stream axis shards over: the
+    largest power of two that both divides the stream bucket ``sb`` and
+    fits the local device count (``distributed.sharding.stream_mesh_size``
+    owns the arithmetic — a bucket smaller than the host's device count
+    caps at its own pow2 divisor, never an indivisible sharding).  One
+    device (the tests' configuration) degrades to no sharding."""
     devs = jax.devices()
-    d = 1
-    while d * 2 <= len(devs) and sb % (d * 2) == 0:
-        d *= 2
-    return devs[:d]
+    return devs[:stream_mesh_size(sb, len(devs))]
 
 
 class _FleetStack:
     """Owner of one fleet fit's stacked, device-resident params pytree.
     ``stacked`` keeps a leading stream-bucket axis (possibly sharded across
-    the local mesh); views slice it lazily."""
+    the local mesh); views slice it lazily, from a host copy materialized
+    **once** for the whole bucket."""
 
-    __slots__ = ("stacked",)
+    __slots__ = ("stacked", "_host")
 
     def __init__(self, stacked: Params):
         self.stacked = stacked
+        self._host: Optional[Params] = None
 
     def dim(self) -> int:
         return int(jax.tree_util.tree_leaves(self.stacked)[0].shape[0])
+
+    def host(self) -> Params:
+        """The stacked tree on the host (cached): one ``device_get`` per
+        fit output, however many of its streams materialize — the publish
+        fan-out at S=1k is S numpy slice views of this copy, not S
+        per-stream device slice-and-transfer chains."""
+        if self._host is None:
+            self._host = jax.tree_util.tree_map(
+                np.asarray, jax.device_get(self.stacked))
+        return self._host
 
 
 class FleetParamView:
@@ -178,11 +206,14 @@ class FleetParamView:
         self._tree: Optional[Params] = None
 
     def tree(self) -> Params:
-        """The materialized per-stream params pytree (cached)."""
+        """The materialized per-stream params pytree (cached): host numpy
+        views sliced from the owner's one batched ``device_get`` — the
+        first materialization of *any* sibling pays the transfer once for
+        the whole bucket."""
         if self._tree is None:
             j = self.slot
             self._tree = jax.tree_util.tree_map(lambda a: a[j],
-                                                self.owner.stacked)
+                                                self.owner.host())
         return self._tree
 
     # the per-stream tree's mapping surface, for eager callers that index
@@ -535,6 +566,7 @@ class FleetForecaster:
         self._train_bufs: Dict[Tuple[int, int], Dict[str, np.ndarray]] = {}
         self._opt_carry: Dict[Tuple[int, int], Any] = {}
         self._shardings: Dict[int, Optional[NamedSharding]] = {}
+        self._key_cache: Dict[int, Callable] = {}
         self._predict_cache: Dict[int, Callable] = {}
         self._predict_traces: Dict[Tuple[int, int], int] = {}
         self._predict_bufs: Dict[Tuple, np.ndarray] = {}
@@ -587,17 +619,13 @@ class FleetForecaster:
 
     def _stream_sharding(self, sb: int) -> Optional[NamedSharding]:
         """The stream-axis sharding for bucket ``sb`` over the local device
-        mesh, or None on a single device.  Streams are independent, so
-        sharding the stacked axis is pure data parallelism — bitwise the
-        same per-stream numerics as the unsharded vmap."""
+        mesh, or None on a single device — resolved through
+        ``distributed.sharding.stream_sharding`` (the logical-axis rules
+        with divisibility-aware fallback), cached per bucket.  Streams are
+        independent, so sharding the stacked axis is pure data parallelism
+        — bitwise the same per-stream numerics as the unsharded vmap."""
         if sb not in self._shardings:
-            devs = stream_mesh_devices(sb)
-            if len(devs) <= 1:
-                self._shardings[sb] = None
-            else:
-                mesh = Mesh(np.asarray(devs), ("stream",))
-                self._shardings[sb] = NamedSharding(mesh,
-                                                    PartitionSpec("stream"))
+            self._shardings[sb] = stream_sharding(sb)
         return self._shardings[sb]
 
     def _put(self, a: np.ndarray, sb: int):
@@ -608,22 +636,47 @@ class FleetForecaster:
                        data0: Dict[str, np.ndarray],
                        key0) -> Dict[str, np.ndarray]:
         """The persistent stacked staging buffers for one (stream bucket,
-        shape bucket): x/y/mask plus the per-stream init/perm key rows.
-        Allocated once per bucket (counted), refilled in place every
-        window."""
+        shape bucket): x/y/mask plus the per-stream base-key rows and
+        pad-slot fold ids the batched key derivation consumes.  Allocated
+        once per bucket (counted), refilled in place every window."""
         bufs = self._train_bufs.get((sb, nb))
         if bufs is None:
             # one bundle of arrays per bucket, counted as one allocation
             karr = np.asarray(key0)
             bufs = {"mask": np.zeros((sb, nb), np.float32),
-                    "ik": np.zeros((sb,) + karr.shape, karr.dtype),
-                    "pk": np.zeros((sb,) + karr.shape, karr.dtype)}
+                    "k0": np.zeros((sb,) + karr.shape, karr.dtype),
+                    "fid": np.zeros((sb,), np.int32)}
             for k, v in data0.items():
                 v = np.asarray(v)
                 bufs[k] = np.zeros((sb, nb) + v.shape[1:], v.dtype)
             self._train_bufs[(sb, nb)] = bufs
             self._staging_allocs += 1
         return bufs
+
+    def _key_fn(self, sb: int) -> Callable:
+        """The cached batched key-derivation executable for stream bucket
+        ``sb``: one jitted dispatch turns the fleet's stacked base keys
+        into the per-stream (init, perm) key rows — byte-identical to the
+        per-stream ``split``/``fold_in`` chain, without its O(S) device
+        round-trips — laid out on the stream mesh."""
+        fn = self._key_cache.get(sb)
+        if fn is None:
+            def derive(keys, fold_ids):
+                def one(k, fid):
+                    # pad slots (fid > 0) derive from the group's first key
+                    # exactly as the per-stream path did: fold_in then split
+                    k = jnp.where(fid > 0, jax.random.fold_in(k, fid), k)
+                    ik, pk = jax.random.split(k)
+                    return ik, pk
+
+                return jax.vmap(one)(keys, fold_ids)
+
+            shard = self._stream_sharding(sb)
+            kw = ({} if shard is None
+                  else {"in_shardings": shard, "out_shardings": shard})
+            fn = jax.jit(derive, **kw)
+            self._key_cache[sb] = fn
+        return fn
 
     # -- the cached fleet-fit executable ------------------------------------
 
@@ -672,14 +725,25 @@ class FleetForecaster:
 
     def _carry_init_fn(self, sb: int) -> Callable:
         """One-time (per stream bucket) builder of the initial stacked
-        opt-state carry the donated fit consumes (laid out on the same
-        mesh as the fit's own opt output)."""
+        opt-state carry the donated fit consumes.  On a mesh the carry's
+        leaves get explicit per-leaf shardings from the axis-rules table
+        (``fleet_param_shardings``: stream axis sharded, per-stream model
+        dims replicated per ``PARAM_AXES``) — the layout the fit's own opt
+        output keeps, so window 1's donation never forces a relayout."""
         fn = self._carry_cache.get(sb)
         if fn is None:
             init, opt_init = self.model.init, self.opt.init
+            vmapped = jax.vmap(lambda k: opt_init(init(k)))
             shard = self._stream_sharding(sb)
-            kw = {} if shard is None else {"out_shardings": shard}
-            fn = jax.jit(jax.vmap(lambda k: opt_init(init(k))), **kw)
+            if shard is None:
+                kw = {}
+            else:
+                keys_shape = jax.eval_shape(
+                    lambda: jax.random.split(jax.random.PRNGKey(0), sb))
+                carry_shape = jax.eval_shape(vmapped, keys_shape)
+                kw = {"out_shardings": fleet_param_shardings(
+                    carry_shape, shard.mesh)}
+            fn = jax.jit(vmapped, **kw)
             self._carry_cache[sb] = fn
         return fn
 
@@ -738,29 +802,26 @@ class FleetForecaster:
                 bufs[k][j, n:] = 0
             bufs["mask"][j, :n] = 1.0
             bufs["mask"][j, n:] = 0.0
-            ik, pk = jax.random.split(keys[i])
-            bufs["ik"][j] = np.asarray(ik)
-            bufs["pk"][j] = np.asarray(pk)
-        for j in range(sb - s):
-            # stream-axis padding: zero data + all-zero validity mask, so the
-            # slot's loss/grad are exactly zero (any key gives a fine inert
-            # init; fold_in keeps it deterministic)
-            for k in datas[idxs[0]]:
-                bufs[k][s + j] = 0
-            bufs["mask"][s + j] = 0.0
-            pad_key = jax.random.fold_in(keys[idxs[0]], 1 + j)
-            ik, pk = jax.random.split(pad_key)
-            bufs["ik"][s + j] = np.asarray(ik)
-            bufs["pk"][s + j] = np.asarray(pk)
+            bufs["k0"][j] = np.asarray(keys[i])
+        for k in datas[idxs[0]]:
+            # stream-axis padding: zero data + all-zero validity mask, so
+            # the slot's loss/grad are exactly zero (any key gives a fine
+            # inert init; fold_in keeps it deterministic)
+            bufs[k][s:] = 0
+        bufs["mask"][s:] = 0.0
+        bufs["k0"][s:] = np.asarray(keys[idxs[0]])
+        bufs["fid"][:s] = 0
+        bufs["fid"][s:] = np.arange(1, sb - s + 1, dtype=np.int32)
+        # one batched dispatch derives every stream's (init, perm) keys —
+        # the same split/fold_in chain the sequential path runs per stream
+        ik_d, pk_d = self._key_fn(sb)(bufs["k0"], bufs["fid"])
         padded0 = {k: bufs[k][0] for k in list(datas[idxs[0]]) + ["mask"]}
-        self._check_mask_honored(datas[idxs[0]], padded0, nb,
-                                 jnp.asarray(bufs["ik"][0]))
-        ik_d = self._put(bufs["ik"], sb)
+        self._check_mask_honored(datas[idxs[0]], padded0, nb, ik_d)
         carry = self._opt_carry.pop((sb, nb), None)
         if carry is None:
             carry = self._carry_init_fn(sb)(ik_d)
         params_S, opt_S, losses_S = self._fleet_fit_fn(sb, nb)(
-            carry, ik_d, self._put(bufs["pk"], sb),
+            carry, ik_d, pk_d,
             self._put(bufs["x"], sb), self._put(bufs["y"], sb),
             self._put(bufs["mask"], sb))
         self._opt_carry[(sb, nb)] = opt_S
@@ -878,14 +939,15 @@ class FleetForecaster:
 
     def _check_mask_honored(self, data: Dict[str, np.ndarray],
                             padded: Dict[str, np.ndarray], nb: int,
-                            init_key: jax.Array) -> None:
+                            init_keys: jax.Array) -> None:
         """One-time (per shape bucket) mask guard, same contract as the
         single-stream trainer's; shares its dedup set so a bucket checked by
         either path is checked once.  A window that exactly fills its
         bucket needs no padding and no check (and must not pay the
-        throwaway init every window)."""
+        throwaway init — or even slicing row 0 off the stacked key array —
+        every window)."""
         n = len(next(iter(data.values())))
         if n == nb or nb in self.single._mask_checked:
             return
-        params = self.single._init_fn(init_key)
+        params = self.single._init_fn(init_keys[0])
         self.single._check_mask_honored(data, padded, params, nb)

@@ -158,6 +158,106 @@ def test_bucket_streams():
         bucket_streams(0)
 
 
+def test_bucket_streams_beyond_pow2_of_8():
+    """The thousand-stream regime: buckets keep doubling past 8, so 1k+
+    streams land in a handful of executables instead of thrashing the
+    trace cache."""
+    assert bucket_streams(100) == 128
+    assert bucket_streams(512) == 512
+    assert bucket_streams(1000) == 1024
+    assert bucket_streams(1024) == 1024
+    assert bucket_streams(1025) == 2048
+    # every fleet size up to 1024 shares O(log S) buckets
+    assert len({bucket_streams(s) for s in range(1, 1025)}) == 11
+
+
+def test_fleet_thousand_streams_padded_slots_no_leak(cfg):
+    """S=1000 at tiny shapes buckets to 1024 — 24 padded stream slots in
+    play — and must still (a) fit in ONE dispatch through one executable,
+    and (b) reproduce the unsharded sequential fit per sampled stream (the
+    padded slots' zero-masked work never leaks into real streams)."""
+    from repro.models import get_model
+    from repro.runtime import fleet_key_chains
+
+    model = get_model(cfg)
+    S = 1000
+    ids = [f"s{i:04d}" for i in range(S)]
+    datas = [_window(8, seed=i) for i in range(S)]
+    chains = fleet_key_chains(jax.random.PRNGKey(11), ids, 1)
+    keys = [chains[sid][0] for sid in ids]
+
+    ff = FleetForecaster(model, epochs=1, batch_size=8, predict_fn=None)
+    params, _ = ff.train_fleet(datas, keys)
+    assert ff.train_dispatches == 1
+    assert ff.trace_counts() == {(1024, 8): 1}
+
+    for i in (0, S // 2, S - 1):
+        fc = CompiledForecaster(model, epochs=1, batch_size=8)
+        seq_p, _ = fc.train(datas[i], None, keys[i])
+        for a, b in zip(jax.tree_util.tree_leaves(seq_p),
+                        jax.tree_util.tree_leaves(params[i])):
+            assert float(np.max(np.abs(np.asarray(a) - np.asarray(b)))) \
+                <= 1e-6
+
+
+_SCRIPT_NON_POW2_DEVICES = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=6"
+import jax, numpy as np
+from repro.configs import get_config
+from repro.core import lstm_fleet_forecaster, lstm_forecaster
+from repro.runtime import fleet_key_chains
+from repro.training.compiled import bucket_streams, stream_mesh_devices
+
+assert jax.device_count() == 6, jax.device_count()
+S = 5  # buckets to 8; 8 does not divide 6 devices -> pow2-floor mesh of 4
+assert len(stream_mesh_devices(bucket_streams(S))) == 4
+cfg = get_config("lstm-paper")
+ids = [f"s{i}" for i in range(S)]
+chains = fleet_key_chains(jax.random.PRNGKey(5), ids, 1)
+
+def window(i):
+    rng = np.random.default_rng(100 + i)
+    x = rng.normal(0, 1, (16, 5, 5)).astype(np.float32)
+    y = x[:, :, 0].mean(axis=1, keepdims=True).astype(np.float32)
+    return {"x": x, "y": y}
+
+datas = [window(i) for i in range(S)]
+keys = [chains[s][0] for s in ids]
+ff = lstm_fleet_forecaster(cfg, epochs=2, batch_size=16)
+params, _ = ff.train_fleet(datas, keys)
+assert ff.train_dispatches == 1, ff.train_dispatches
+worst = 0.0
+for i in (0, S - 1):
+    fc = lstm_forecaster(cfg, epochs=2, batch_size=16)
+    sp, _ = fc.train(datas[i], None, keys[i])
+    for a, b in zip(jax.tree_util.tree_leaves(sp),
+                    jax.tree_util.tree_leaves(params[i])):
+        worst = max(worst, float(np.max(np.abs(
+            np.asarray(a) - np.asarray(b)))))
+assert worst <= 1e-6, worst
+print("OK", worst)
+"""
+
+
+def test_fleet_mesh_non_pow2_device_count():
+    """6 forced host devices (a bucket of 8 cannot divide them): the mesh
+    must fall back to the pow2 floor (4) instead of crashing or silently
+    unsharding, and the sharded fit must match the unsharded sequential
+    path."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    res = subprocess.run([sys.executable, "-c", _SCRIPT_NON_POW2_DEVICES],
+                         env=env, capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    assert "OK" in res.stdout
+
+
 # ---------------------------------------------------------------------------
 # fleet executors: parity with the single-stream loop
 # ---------------------------------------------------------------------------
@@ -465,3 +565,73 @@ def test_gated_inprocess_serves_prior_model_on_skip(fleet_setup, cfg):
             # a synced speed model exists from window 0 on; even when stale
             # it is a different model from the batch one
             assert r.rmse_speed != pytest.approx(r.rmse_batch, abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# batch-model refresh from archived drifted windows
+# ---------------------------------------------------------------------------
+
+
+def test_batch_refresh_rides_fleet_dispatch(fleet_setup, cfg):
+    """Gated run with a BatchRefresh stage: archived drifted windows
+    retrain the batch models in whole-fleet dispatches on the refresh
+    cadence, counted separately from the speed-training dispatches, and
+    the result reproduces deterministically."""
+    from repro.core.stages import BatchRefresh
+
+    streams, bp = fleet_setup
+    key = jax.random.PRNGKey(1)
+
+    stages, ff = _fleet_stages(cfg)
+    # the fixture's gate fires only on the warmup window, so one archived
+    # window must be enough to join the refresh cohort here
+    rf = BatchRefresh(ff, every=2, min_windows=1, max_windows=4)
+    ex = InProcessFleetExecutor(stages, gate=DriftGate(), batch_refresh=rf)
+    res = ex.run(streams, bp, key)
+
+    assert res.refresh is not None
+    assert res.refresh["rounds"] >= 1
+    assert res.refresh["dispatches"] >= 1
+    assert res.refresh["refreshed"], "no stream ever refreshed"
+    # speed-training accounting excludes the refresh dispatches
+    assert res.train_dispatches <= res.n_windows
+    # refreshed streams had archived >= min_windows drifted windows
+    for sid in res.refresh["refreshed"]:
+        assert sum(res.retrain_log[sid]) >= rf.min_windows
+
+    # a second run through the same executor reproduces exactly
+    res2 = ex.run(streams, bp, key)
+    assert res2.refresh["rounds"] == res.refresh["rounds"]
+    assert res2.refresh["refreshed"] == res.refresh["refreshed"]
+    assert res2.retrain_log == res.retrain_log
+
+
+def test_batch_refresh_updates_batch_params(cfg):
+    """After a refresh round, the refreshed stream's batch-inference RMSE
+    must change on later windows (the new batch model is actually
+    installed), while an un-refreshed baseline run keeps the pretrained
+    one throughout."""
+    from repro.core.stages import BatchRefresh
+
+    streams, hist0 = fleet_windowed_streams(
+        2, 6, RPW, ["abrupt", "abrupt"], seed=3, hist_len=1200)
+    fc_batch = lstm_forecaster(cfg, epochs=4, batch_size=256)
+    bp, _ = pretrain_batch_model(fc_batch, hist0, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(9)
+
+    stages_a, _ = _fleet_stages(cfg)
+    base = InProcessFleetExecutor(stages_a).run(streams, bp, key)
+    stages_b, ffb = _fleet_stages(cfg)
+    rf = BatchRefresh(ffb, every=2, min_windows=2, max_windows=4)
+    ref = InProcessFleetExecutor(stages_b, batch_refresh=rf).run(
+        streams, bp, key)
+
+    assert ref.refresh["rounds"] >= 1
+    # identical up to the first refresh round, so any divergence proves
+    # the refreshed batch model was installed and served
+    changed = False
+    for sid in ref.refresh["refreshed"]:
+        for a, b in zip(base.results[sid].records, ref.results[sid].records):
+            if a.rmse_batch != b.rmse_batch:
+                changed = True
+    assert changed, "refreshed batch model never served"

@@ -117,6 +117,42 @@ def test_qtensor_is_a_pytree():
     assert y.shape == (4, 32)
 
 
+def test_quantize_fleet_bitwise_matches_per_stream():
+    """The batched fleet sync quantization (one vectorized pass over the
+    stacked host tree) must be bitwise identical to per-stream
+    ``quantize_tree``, preserve input order with plain trees mixed in, and
+    pass small/1-D leaves through in float."""
+    from repro.serving.quantize import quantize_fleet
+    from repro.training.compiled import FleetParamView, _FleetStack
+
+    k = jax.random.PRNGKey(0)
+    stacked = {
+        "w": jax.random.normal(k, (4, 64, 32)) * 3.0,
+        "b": jax.random.normal(jax.random.PRNGKey(1), (4, 32)),
+    }
+    stack = _FleetStack(stacked)
+    views = [FleetParamView(stack, j) for j in range(4)]
+    plain = {"w": jax.random.normal(jax.random.PRNGKey(2), (64, 32)),
+             "b": jnp.zeros((32,))}
+    seq = [views[0], plain, views[2], views[1], views[3]]
+
+    out = quantize_fleet(seq, min_size=64)
+    assert len(out) == len(seq)
+    for got, src in zip(out, seq):
+        ref = quantize_tree(
+            src.tree() if isinstance(src, FleetParamView) else src,
+            min_size=64)
+        assert isinstance(got["w"], QTensor)
+        np.testing.assert_array_equal(np.asarray(got["w"].q),
+                                      np.asarray(ref["w"].q))
+        np.testing.assert_array_equal(np.asarray(got["w"].scale),
+                                      np.asarray(ref["w"].scale))
+        # 1-D bias passes through in float, bitwise
+        assert not isinstance(got["b"], QTensor)
+        np.testing.assert_array_equal(np.asarray(got["b"]),
+                                      np.asarray(ref["b"]))
+
+
 def test_int8_synced_model_serving_accuracy():
     """The int8 *serving* path: QTensor params handed straight to the
     forecaster (what ``BusExecutor(quantized_sync=True)`` installs at the

@@ -115,3 +115,75 @@ def test_shard_constraint_under_real_mesh():
 
     out = f(jnp.ones((4, 8)))
     np.testing.assert_allclose(np.asarray(out), 2.0)
+
+
+# ---------------------------------------------------------------------------
+# The stream mesh (fleet hot path)
+# ---------------------------------------------------------------------------
+
+
+def test_largest_pow2_divisor():
+    from repro.distributed.sharding import largest_pow2_divisor
+
+    assert largest_pow2_divisor(1) == 1
+    assert largest_pow2_divisor(6) == 2
+    assert largest_pow2_divisor(12) == 4
+    assert largest_pow2_divisor(1024) == 1024
+    with pytest.raises(ValueError):
+        largest_pow2_divisor(0)
+
+
+@pytest.mark.parametrize("sb,nd,want", [
+    (2, 8, 2),      # bucket smaller than the host: cap at the bucket
+    (1024, 6, 4),   # non-pow2 device count: pow2 floor
+    (8, 6, 4),
+    (4, 3, 2),
+    (16, 1, 1),     # single device: no sharding
+    (12, 8, 4),     # non-pow2 bucket: its own pow2 divisor
+    (1, 8, 1),
+])
+def test_stream_mesh_size(sb, nd, want):
+    from repro.distributed.sharding import stream_mesh_size
+
+    assert stream_mesh_size(sb, nd) == want
+
+
+def test_stream_mesh_and_sharding_single_device():
+    """On one device the mesh collapses and stream_sharding opts out —
+    the tests' one-CPU configuration never constructs a sharding."""
+    from repro.distributed.sharding import stream_mesh, stream_sharding
+
+    devs = jax.devices()[:1]
+    assert stream_mesh(8, devs) is None
+    assert stream_sharding(8, devs) is None
+
+
+def test_stream_batch_spec_divisibility_fallback():
+    from repro.distributed.sharding import (
+        STREAM_AXIS,
+        stream_batch_spec,
+    )
+
+    mesh = fake_mesh((4,), (STREAM_AXIS,))
+    assert stream_batch_spec(8, mesh) == P(STREAM_AXIS)
+    # indivisible bucket degrades to replicated instead of erroring
+    assert stream_batch_spec(3, mesh) == P(None)
+
+
+def test_fleet_param_shardings_specs():
+    """Stacked fleet leaves: stream axis sharded, per-stream LSTM trailing
+    dims replicated; unregistered leaves (opt-state counters) fall back to
+    replicated trailing dims instead of raising."""
+    from repro.distributed.sharding import STREAM_AXIS, fleet_param_shardings
+
+    mesh = jax.make_mesh((1,), (STREAM_AXIS,))
+    stacked = {
+        "lstm": {"kernel": jnp.zeros((8, 20, 160))},
+        "head": {"head_b": jnp.zeros((8, 1))},
+        "opt_count": jnp.zeros((8,), jnp.int32),  # no PARAM_AXES entry
+    }
+    sh = fleet_param_shardings(stacked, mesh)
+    got = jax.tree_util.tree_map(lambda s: s.spec, sh)
+    assert got["lstm"]["kernel"] == P(STREAM_AXIS, None, None)
+    assert got["head"]["head_b"] == P(STREAM_AXIS, None)
+    assert got["opt_count"] == P(STREAM_AXIS)
