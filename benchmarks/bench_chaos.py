@@ -13,11 +13,20 @@ Sections:
   fixed seed: RMSE ratio vs fault-free, p99 answer latency, max served
   staleness, fallback fraction, fault/recovery counters, zero unhandled
   exceptions.  Scenario-specific gates: corrupted publishes detected 100%
-  and never installed; partitioned sync keeps served staleness within the
-  watchdog bound and hybrid RMSE <= 1.5x fault-free.
-* ``determinism`` — the RNG-heaviest scenario (sensor_chaos) run twice under
-  the same seed must produce byte-identical bus logs, ledgers, and
-  forecasts; a different seed must produce a different fault schedule.
+  and never installed; *forged* publishes (valid crc32, no valid HMAC)
+  rejected 100% by the signed-sync verifier; partitioned sync keeps served
+  staleness within the watchdog bound and hybrid RMSE <= 1.5x fault-free.
+* ``health`` — the self-diagnosing health plane's own envelope: zero false
+  positives on the fault-free run (no suspicions, no Byzantine flags, no
+  signature rejections, no threshold adaptations), and partition/crash
+  detection latency within 2 heartbeat intervals of fault onset.
+* ``adaptive`` — the adaptive-threshold path against a static-threshold
+  plane on the fault-free run: byte-identical bus log, ledger, and
+  forecasts (adaptation must cost nothing when calm); a faulty run must
+  record at least one threshold adaptation.
+* ``determinism`` — EVERY scenario rerun under the same seed must produce
+  byte-identical bus logs, ledgers, and forecasts; a different seed must
+  produce a different fault schedule.
 
     PYTHONPATH=src python -m benchmarks.bench_chaos            # full
     PYTHONPATH=src python -m benchmarks.bench_chaos --smoke    # CI
@@ -55,6 +64,10 @@ def run(smoke: bool) -> Dict:
         "staleness_bound": h.staleness_bound,
     }}
 
+    def sigs(res):
+        return (bus_signature(res), ledger_signature(res),
+                forecast_signature(res))
+
     # -- parity: empty fault plane == no fault plane -------------------------
     print("parity: plain (no plane) vs fault_free (empty plane) ...")
     plain = h.run_plain()
@@ -74,6 +87,7 @@ def run(smoke: bool) -> Dict:
     # -- the scenario envelopes ----------------------------------------------
     base = env_ff["rmse_hybrid"]
     out["scenarios"] = {}
+    first_sigs: Dict[str, tuple] = {}
     for name in SCENARIOS:
         print(f"scenario: {name} ...")
         env, res = h.run_scenario(name, seed=SEED)
@@ -87,20 +101,63 @@ def run(smoke: bool) -> Dict:
             env["corrupt_detected_frac"] = (
                 env["corrupt_rejected"] / env["corrupt_injected"]
                 if env["corrupt_injected"] else 1.0)
+        if name == "forged_sync" and res is not None:
+            stats = env["fault_stats"]
+            env["forged_injected"] = stats.get("msg_forge", 0)
+            env["forged_detected_frac"] = (
+                env["forged_rejected"] / env["forged_injected"]
+                if env["forged_injected"] else 1.0)
+        if res is not None:
+            first_sigs[name] = sigs(res)
         out["scenarios"][name] = env
 
-    # -- determinism: same seed -> byte-identical run ------------------------
-    print("determinism: sensor_chaos x2 same seed, x1 different seed ...")
-    _, r1 = h.run_scenario("sensor_chaos", seed=SEED)
-    _, r2 = h.run_scenario("sensor_chaos", seed=SEED)
-    _, r3 = h.run_scenario("sensor_chaos", seed=SEED + 7)
-    out["determinism"] = {
-        "bus_log_identical": bus_signature(r1) == bus_signature(r2),
-        "ledger_identical": ledger_signature(r1) == ledger_signature(r2),
-        "forecasts_identical": (forecast_signature(r1)
-                                == forecast_signature(r2)),
-        "different_seed_differs": bus_signature(r1) != bus_signature(r3),
+    # -- health plane: false-positive floor + detection latency --------------
+    hff = out["scenarios"]["fault_free"].get("health", {})
+    out["health"] = {
+        "fault_free_suspicions": hff.get("n_suspected", -1),
+        "fault_free_byz_flagged": hff.get("byz_flagged", -1),
+        "fault_free_forged_rejected": out["scenarios"]["fault_free"].get(
+            "forged_rejected", -1),
+        "fault_free_threshold_adaptations": hff.get(
+            "threshold_adaptations", -1),
+        "detection": {},
     }
+    for name in ("partitioned_sync", "site_crash"):
+        hs = out["scenarios"][name].get("health", {})
+        out["health"]["detection"][name] = {
+            "latency_s": hs.get("detection_latency_s"),
+            "latency_hb_intervals": hs.get("detection_latency_hb_intervals"),
+            "n_recovered": hs.get("n_recovered", 0),
+        }
+
+    # -- adaptive thresholds: free when calm, engaged under faults -----------
+    print("adaptive: fault_free under static thresholds ...")
+    _, r_static = h.run_scenario("fault_free", seed=SEED, adaptive=False)
+    st = sigs(r_static)
+    out["adaptive"] = {
+        "calm_bus_identical": first_sigs["fault_free"][0] == st[0],
+        "calm_ledger_identical": first_sigs["fault_free"][1] == st[1],
+        "calm_forecasts_identical": first_sigs["fault_free"][2] == st[2],
+        "faulty_threshold_adaptations": out["scenarios"][
+            "partitioned_sync"].get("health", {}).get(
+                "threshold_adaptations", 0),
+    }
+
+    # -- determinism: same seed -> byte-identical, every scenario ------------
+    out["determinism"] = {"per_scenario": {}}
+    for name in SCENARIOS:
+        print(f"determinism: {name} rerun ...")
+        _, r2 = h.run_scenario(name, seed=SEED)
+        s1, s2 = first_sigs[name], sigs(r2)
+        out["determinism"]["per_scenario"][name] = {
+            "bus_log_identical": s1[0] == s2[0],
+            "ledger_identical": s1[1] == s2[1],
+            "forecasts_identical": s1[2] == s2[2],
+        }
+    print("determinism: sensor_chaos under a different seed ...")
+    _, r3 = h.run_scenario("sensor_chaos", seed=SEED + 7)
+    out["determinism"]["different_seed_differs"] = (
+        first_sigs["sensor_chaos"][0] != bus_signature(r3))
     return out
 
 
@@ -131,10 +188,27 @@ def main() -> None:
               f"stale<= {env['max_staleness']}, "
               f"fallback {env['fallback_frac']:.2f}, "
               f"answered {env['n_answered']} (starved {env['n_starved']})")
+    h = res["health"]
+    print(f"health: fault-free FPs {h['fault_free_suspicions']} suspicions/"
+          f"{h['fault_free_byz_flagged']} byz flags/"
+          f"{h['fault_free_forged_rejected']} sig rejects, "
+          + ", ".join(
+              f"{n} detected in {det['latency_hb_intervals']:.2f} hb "
+              f"intervals" for n, det in h["detection"].items()
+              if det["latency_hb_intervals"] is not None))
+    fg = res["scenarios"]["forged_sync"]
+    print(f"forged sync: {fg['forged_rejected']}/{fg['forged_injected']} "
+          f"rejected by HMAC (checksum alone accepted all of them)")
+    a = res["adaptive"]
+    print(f"adaptive: calm run identical to static thresholds "
+          f"{a['calm_bus_identical'] and a['calm_ledger_identical'] and a['calm_forecasts_identical']}, "
+          f"{a['faulty_threshold_adaptations']} adaptation(s) under the "
+          f"partition")
     d = res["determinism"]
-    print(f"determinism: bus {d['bus_log_identical']}, ledger "
-          f"{d['ledger_identical']}, forecasts {d['forecasts_identical']}, "
-          f"seed-sensitivity {d['different_seed_differs']}")
+    ok = all(all(s.values()) for s in d["per_scenario"].values())
+    print(f"determinism: all {len(d['per_scenario'])} scenarios rerun "
+          f"byte-identical: {ok}, seed-sensitivity "
+          f"{d['different_seed_differs']}")
 
 
 if __name__ == "__main__":

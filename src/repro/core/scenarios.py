@@ -22,8 +22,15 @@ fallback — instead of assuming it degrades gracefully:
 * ``corrupted_int8_sync`` — int8 model sync with bit-flip corruption on half
   the model publishes: every corrupt publish must be checksum-detected and
   never served; re-requests recover clean copies.
+* ``forged_sync``         — int8 model sync with *forged* publishes: the
+  adversary perturbs the parameters and recomputes the crc32 so the
+  checksum alone would accept — only the HMAC signature (health plane's
+  signed sync) catches it; every forge must be rejected and re-requested.
+* ``byzantine``           — sensors emit plausible-but-wrong values (offset
+  by several robust sigmas, not NaN garbage): the per-stream median/MAD
+  guard must flag and impute them before they reach training.
 * ``compound_drift``      — no injected faults, adversarial *data*: the
-  fleet mixes gradual, abrupt, and stationary streams per stream.
+  fleet mixes gradual, seasonal, abrupt, and stationary streams per stream.
 
 All runs use ``CHAOS_STAGE_COSTS`` — fixed virtual stage walls instead of
 perf-counter measurements — so the same fault seed reproduces the run
@@ -64,7 +71,8 @@ CHAOS_STAGE_COSTS: Dict[str, float] = {
 }
 
 SCENARIOS = ("fault_free", "site_crash", "partitioned_sync", "sensor_chaos",
-             "corrupted_int8_sync", "compound_drift")
+             "corrupted_int8_sync", "forged_sync", "byzantine",
+             "compound_drift")
 
 # per-scenario degradation envelope: max hybrid-RMSE ratio vs the fault-free
 # run.  fault_free is exact parity; partition/crash must stay within the
@@ -77,6 +85,8 @@ RMSE_RATIO_MAX: Dict[str, float] = {
     "partitioned_sync": 1.5,
     "sensor_chaos": 2.0,
     "corrupted_int8_sync": 1.5,
+    "forged_sync": 1.5,
+    "byzantine": 2.5,
     "compound_drift": 3.0,
 }
 
@@ -102,14 +112,32 @@ def scenario_plane(name: str, seed: int, period_s: float) -> FaultPlane:
     if name == "corrupted_int8_sync":
         return FaultPlane(seed, message_faults=[
             MessageFault("model/latest/*", "corrupt", p=0.5)])
+    if name == "forged_sync":
+        return FaultPlane(seed, message_faults=[
+            MessageFault("model/latest/*", "forge", p=0.5)])
+    if name == "byzantine":
+        return FaultPlane(seed, sensor_faults=[
+            SensorFault(p_byzantine=0.5)])
     raise ValueError(f"unknown scenario {name!r}; pick from {SCENARIOS}")
 
 
 def scenario_quantized(name: str) -> bool:
-    """Only the corruption scenario forces int8 sync (bit flips in a
-    quantized tree are its whole point); the rest inherit the harness
-    default."""
-    return name == "corrupted_int8_sync"
+    """The corruption and forgery scenarios force int8 sync: bit flips in a
+    quantized tree are corruption's whole point, and forgery must prove the
+    HMAC covers the int8 QTensor serialization too.  The rest inherit the
+    harness default."""
+    return name in ("corrupted_int8_sync", "forged_sync")
+
+
+def scenario_fault_start(name: str, period_s: float) -> Optional[float]:
+    """Virtual time the named scenario's connectivity fault begins — the
+    reference point for measured partition/crash detection latency.  None
+    for scenarios with no site/link outage."""
+    if name == "site_crash":
+        return 2.02 * period_s
+    if name == "partitioned_sync":
+        return 1.2 * period_s
+    return None
 
 
 # -- determinism signatures ---------------------------------------------------
@@ -150,7 +178,14 @@ class ChaosHarness:
     (stream *history* is drift-independent by construction —
     ``fleet_windowed_streams`` starts drift where the live stream starts —
     so one pretrain serves every stream-scenario mix, including
-    ``compound_drift``'s per-stream gradual/abrupt/none cycle)."""
+    ``compound_drift``'s per-stream gradual/seasonal/abrupt/none cycle).
+
+    Every scenario run carries the self-diagnosing health plane
+    (``runtime.health.HealthPlane``): heartbeat partition detection, signed
+    model sync, the Byzantine value guard, and adaptive fault thresholds.
+    ``run_scenario(..., adaptive=False)`` swaps in a static-threshold plane
+    so the adaptive path can be proven byte-identical when no faults fire.
+    ``run_plain`` stays plane-less — the parity reference."""
 
     def __init__(self, *, n_streams: int = 3, n_windows: int = 6,
                  records_per_window: int = 120, period_s: float = 5.0,
@@ -158,6 +193,7 @@ class ChaosHarness:
                  staleness_bound: int = 1, base_scenario: str = "gradual",
                  verbose: bool = False):
         from repro.launch.edge_cloud import build_fleet_pipeline
+        from repro.runtime.health import HealthConfig, HealthPlane
 
         self.n_streams = n_streams
         self.n_windows = n_windows
@@ -167,6 +203,8 @@ class ChaosHarness:
         self.serve_slots = serve_slots
         self.staleness_bound = staleness_bound
         self.base_scenario = base_scenario
+        self.health = HealthPlane(HealthConfig())
+        self.health_static = HealthPlane(HealthConfig(adaptive=False))
         self.stages, self.bp, self._base_streams, self.cost = \
             build_fleet_pipeline(n_streams, n_windows, fast=True,
                                  records_per_window=records_per_window,
@@ -179,15 +217,18 @@ class ChaosHarness:
         if self._compound_streams is None:
             from repro.streams.sources import fleet_windowed_streams
 
-            cycle = ["gradual", "abrupt", "none"]
-            scenarios = [cycle[i % 3] for i in range(self.n_streams)]
+            # seasonal sits second so even the 2-stream smoke harness
+            # exercises the excursion-and-return regime
+            cycle = ["gradual", "seasonal", "abrupt", "none"]
+            scenarios = [cycle[i % len(cycle)]
+                         for i in range(self.n_streams)]
             self._compound_streams, _ = fleet_windowed_streams(
                 self.n_streams, self.n_windows, self.rpw, scenarios,
                 alphas=np.full(5, 1.5e-3))
         return self._compound_streams
 
     def executor(self, fault_plane: Optional[FaultPlane],
-                 quantized: bool = False):
+                 quantized: bool = False, health_plane=None):
         from repro.runtime import FleetBusExecutor, paper_topology
         from repro.runtime.deployment import edge_cloud_integrated
 
@@ -196,7 +237,8 @@ class ChaosHarness:
             self.cost, window_period_s=self.period, qps=self.qps,
             serve_slots=self.serve_slots, quantized_sync=quantized,
             fault_plane=fault_plane, stage_costs=dict(CHAOS_STAGE_COSTS),
-            staleness_bound=self.staleness_bound)
+            staleness_bound=self.staleness_bound,
+            health_plane=health_plane)
 
     def run_plain(self):
         """The non-chaos reference path: no fault plane at all (the bus
@@ -207,7 +249,7 @@ class ChaosHarness:
         ex = self.executor(None)
         return ex.run(self._base_streams, self.bp, jax.random.PRNGKey(1))
 
-    def run_scenario(self, name: str, seed: int = 0
+    def run_scenario(self, name: str, seed: int = 0, adaptive: bool = True
                      ) -> Tuple[Dict[str, Any], Any]:
         """Run one scenario; returns (envelope, FleetBusRunResult).  Any
         exception is itself a failed envelope (``unhandled_exception``) —
@@ -215,7 +257,9 @@ class ChaosHarness:
         import jax
 
         plane = scenario_plane(name, seed, self.period)
-        ex = self.executor(plane, quantized=scenario_quantized(name))
+        hp = self.health if adaptive else self.health_static
+        ex = self.executor(plane, quantized=scenario_quantized(name),
+                           health_plane=hp)
         try:
             res = ex.run(self.streams_for(name), self.bp,
                          jax.random.PRNGKey(1))
@@ -250,4 +294,27 @@ class ChaosHarness:
             env["checksum_verified"] = res.chaos["checksum_verified"]
             env["resync_requests"] = res.chaos["resync_requests"]
             env["quarantined"] = res.chaos["quarantined"]
+            env["forged_rejected"] = res.chaos.get("forged_rejected", 0)
+        h = getattr(res, "health", None)
+        if h is not None:
+            env["health"] = {
+                "signed_sync": h["signed_sync"],
+                "adaptive": h["adaptive"],
+                "n_suspected": h["n_suspected"],
+                "n_site_down": h["n_site_down"],
+                "n_recovered": h["n_recovered"],
+                "first_suspect_t": h["first_suspect_t"],
+                "hb_interval_s": h["hb_interval_s"],
+                "byz_screened": h["byz_screened"],
+                "byz_flagged": h["byz_flagged"],
+                "threshold_adaptations": h["threshold_adaptations"],
+                "adapted_quarantine_after": h["adapted_quarantine_after"],
+                "adapted_staleness_bound": h["adapted_staleness_bound"],
+            }
+            t0 = scenario_fault_start(name, self.period)
+            if t0 is not None and h["first_suspect_t"] is not None:
+                env["health"]["detection_latency_s"] = (
+                    h["first_suspect_t"] - t0)
+                env["health"]["detection_latency_hb_intervals"] = (
+                    (h["first_suspect_t"] - t0) / h["hb_interval_s"])
         return env

@@ -211,24 +211,46 @@ class ModelSync(Stage):
     installing anything: a mismatch — e.g. a bit-flipped int8 ``QTensor``
     in transit — returns ``ok=False`` with no state update, increments
     ``corrupt_rejected``, and leaves re-request to the executor.  A corrupt
-    model must *never* be served."""
+    model must *never* be served.
+
+    When a ``sig_key`` is configured (the health plane's authenticated
+    sync), the publish must also carry a valid HMAC-SHA256 ``signature``
+    over the tree.  crc32 catches corruption but not tampering — a forger
+    recomputes it over the forged params — while the HMAC requires the run
+    key the forger does not hold; a bad or missing signature increments
+    ``forged_rejected`` and rejects identically."""
 
     name = "model_sync"
 
     def __init__(self):
         self.verified = 0
         self.corrupt_rejected = 0
+        self.forged_rejected = 0
+
+    _REJECT = {"ok": False, "speed_params": None,
+               "prev_preds": None, "prev_y": None}
 
     def compute(self, *, params: Params, eval_preds, eval_y,
-                checksum: Optional[int] = None) -> Dict[str, Any]:
+                checksum: Optional[int] = None,
+                signature: Optional[str] = None,
+                sig_key: Optional[bytes] = None) -> Dict[str, Any]:
+        # checksum first (integrity: bit flips in transit), signature second
+        # (authenticity: a forger recomputes the crc32, so only the HMAC
+        # catches it) — the counters then attribute each rejection to the
+        # layer that actually caught it
         if checksum is not None:
             from repro.runtime.faults import tree_checksum
 
             if tree_checksum(params) != checksum:
                 self.corrupt_rejected += 1
-                return {"ok": False, "speed_params": None,
-                        "prev_preds": None, "prev_y": None}
+                return dict(self._REJECT)
             self.verified += 1
+        if sig_key is not None:
+            from repro.runtime.health import verify_tree
+
+            if not verify_tree(params, sig_key, signature):
+                self.forged_rejected += 1
+                return dict(self._REJECT, forged=True)
         return {"ok": True, "speed_params": params, "prev_preds": eval_preds,
                 "prev_y": eval_y}
 

@@ -332,13 +332,14 @@ def run_chaos(args) -> None:
     h = ChaosHarness(n_streams=n_streams, n_windows=n_windows,
                      records_per_window=120, period_s=period, qps=qps,
                      serve_slots=args.slots, verbose=True)
+    seed = args.chaos_seed
     print(f"\n[chaos:{args.chaos}] {n_streams} streams x {n_windows} "
-          f"windows, period {period}s, {qps} qps")
-    env, res = h.run_scenario(args.chaos, seed=0)
+          f"windows, period {period}s, {qps} qps, seed {seed}")
+    env, res = h.run_scenario(args.chaos, seed=seed)
     if env["unhandled_exception"] is not None:
         raise SystemExit(f"chaos run crashed: {env['unhandled_exception']}")
     if args.chaos != "fault_free":
-        env_ff, _ = h.run_scenario("fault_free", seed=0)
+        env_ff, _ = h.run_scenario("fault_free", seed=seed)
         ratio = env["rmse_hybrid"] / env_ff["rmse_hybrid"]
         print(f"  hybrid RMSE {env['rmse_hybrid']:.4f} "
               f"(x{ratio:.3f} vs fault-free)")
@@ -350,12 +351,25 @@ def run_chaos(args) -> None:
           f"fallback {env['fallback_frac']:.2f}")
     print(f"  dead letters {env['dead_letters']}, quarantined "
           f"{env.get('quarantined', {})}, corrupt rejected "
-          f"{env.get('corrupt_rejected', 0)}, resync requests "
+          f"{env.get('corrupt_rejected', 0)}, forged rejected "
+          f"{env.get('forged_rejected', 0)}, resync requests "
           f"{env.get('resync_requests', 0)}")
     stats = env.get("fault_stats", {})
     if stats:
         print("  fault events: " + ", ".join(
             f"{k}={v}" for k, v in sorted(stats.items())))
+    hlt = env.get("health")
+    if hlt:
+        print(f"  health: {hlt['n_suspected']} suspected, "
+              f"{hlt['n_site_down']} down, {hlt['n_recovered']} recovered; "
+              f"byzantine {hlt['byz_flagged']}/{hlt['byz_screened']} "
+              f"flagged; {hlt['threshold_adaptations']} threshold "
+              f"adaptation(s)")
+        if hlt.get("detection_latency_s") is not None:
+            print(f"  health: fault detected "
+                  f"{hlt['detection_latency_s']:.2f}s after onset "
+                  f"({hlt['detection_latency_hb_intervals']:.2f} heartbeat "
+                  f"intervals)")
 
 
 def main() -> None:
@@ -364,11 +378,13 @@ def main() -> None:
                    choices=["edge", "cloud", "integrated", "all"],
                    default="all")
     p.add_argument("--windows", type=int, default=25)
-    p.add_argument("--scenario", choices=["none", "gradual", "abrupt"],
+    p.add_argument("--scenario",
+                   choices=["none", "gradual", "abrupt", "seasonal"],
                    default="gradual",
                    help="the paper's drift scenario (Sec. 6.1.3): stationary"
                         " stream, Eq. 6 gradual drift, or Eq. 7 abrupt "
-                        "drift")
+                        "drift — plus the seasonal excursion-and-return "
+                        "extension")
     p.add_argument("--streams", type=int, default=1,
                    help="fleet size: >1 multiplexes N correlated turbine "
                         "streams over per-stream topics under one "
@@ -418,11 +434,17 @@ def main() -> None:
     p.add_argument("--chaos", default=None,
                    help="run one chaos scenario from core.scenarios "
                         "(fault_free, site_crash, partitioned_sync, "
-                        "sensor_chaos, corrupted_int8_sync, compound_drift) "
-                        "against the fleet under a seeded fault plane and "
-                        "print its degradation envelope; honours --streams/"
+                        "sensor_chaos, corrupted_int8_sync, forged_sync, "
+                        "byzantine, compound_drift) against the fleet under "
+                        "a seeded fault plane with the health plane "
+                        "attached, and print its degradation envelope + "
+                        "health verdicts; honours --streams/"
                         "--windows/--period/--qps/--slots, with chaos-sized "
                         "defaults otherwise")
+    p.add_argument("--chaos-seed", type=int, default=0,
+                   help="fault-plane seed for --chaos: a different seed "
+                        "draws a different (but equally reproducible) "
+                        "fault schedule")
     args = p.parse_args()
 
     if args.chaos is not None:

@@ -17,7 +17,17 @@ from repro.runtime.faults import (  # noqa: F401
     SensorFault,
     SiteFault,
     corrupt_tree,
+    forge_tree,
     tree_checksum,
+)
+from repro.runtime.health import (  # noqa: F401
+    ByzantineGuard,
+    FaultRateEstimator,
+    HealthConfig,
+    HealthPlane,
+    derive_sync_key,
+    sign_tree,
+    verify_tree,
 )
 from repro.runtime.deployment import (  # noqa: F401
     ALL_DEPLOYMENTS,

@@ -78,6 +78,8 @@ from repro.runtime.latency import CostModel, LatencyLedger
 from repro.runtime.modules import (
     T_BATCH,
     T_CTRL,
+    T_HEALTH_CHECK,
+    T_HEALTH_HB,
     T_HYBRID,
     T_MODEL,
     T_REQUEST,
@@ -743,6 +745,10 @@ class FleetBusRunResult(FleetRunResult):
     placement: Optional[Dict[str, Any]] = None
     infer_dispatches: Optional[Dict[str, Dict[str, int]]] = None
     final_params: Optional[Dict[StreamId, Any]] = None
+    # the health plane's run verdict (when a HealthPlane drove the run):
+    # partition/site-down/recovered verdicts with times, signed-sync and
+    # Byzantine-guard counters, and every adaptive-threshold tightening
+    health: Optional[Dict[str, Any]] = None
 
     def table3(self) -> Dict[str, Dict[str, float]]:
         return self.ledger.table()
@@ -989,6 +995,7 @@ class FleetBusExecutor(_BusRuntime):
         query_trace: Optional[List[Any]] = None,
         query_seed: int = 0,
         fault_plane: Optional[Any] = None,
+        health_plane: Optional[Any] = None,
         stage_costs: Optional[Dict[str, float]] = None,
         staleness_bound: int = 1,
         agg_timeout_s: Optional[float] = None,
@@ -1015,6 +1022,12 @@ class FleetBusExecutor(_BusRuntime):
         self.query_trace = query_trace
         self.query_seed = query_seed
         self.fault_plane = fault_plane
+        # the self-diagnosing half of fault tolerance (runtime.health): a
+        # goldpinger-style heartbeat/monitor mesh over the topology's sites,
+        # HMAC-signed model sync, the Byzantine sensor-value guard in the
+        # injection path, and fault-rate-adaptive quarantine/staleness
+        # thresholds (the constructor knobs below become the *base* values)
+        self.health_plane = health_plane
         self.stage_costs = stage_costs
         self.staleness_bound = staleness_bound
         self.agg_timeout_s = (agg_timeout_s if agg_timeout_s is not None
@@ -1163,6 +1176,23 @@ class FleetBusExecutor(_BusRuntime):
         sub(T_RESYNC, "speed_training", self._on_resync)
         if self._controller is not None:
             bus.subscribe(T_CTRL, self._ctrl_site_name(), self._on_ctrl_tick)
+        if self.health_plane is not None:
+            # the goldpinger mesh: every site monitors every other — each
+            # site subscribes the heartbeat wildcard (deliveries from peers
+            # ride the real links, so partitions and crashes cut them) and
+            # its own exact-topic check beat (loopback publish from itself:
+            # a down site's monitor goes silent, exactly like a down
+            # goldpinger pod).  Handlers are pure bookkeeping — they never
+            # occupy a pool worker, so the data plane is unperturbed.
+            hp = self.health_plane
+            for name in self.topo.sites:
+                bus.subscribe(
+                    T_HEALTH_HB + "/+", name,
+                    lambda msg, obs=name: hp.observe_heartbeat(
+                        obs, msg.payload["site"], msg.deliver_time))
+                bus.subscribe(
+                    stream_topic(T_HEALTH_CHECK, name), name,
+                    lambda msg, obs=name: hp.check(obs, msg.deliver_time))
         if self._serving_enabled:
             # the request plane: stream windows feed the serving contexts,
             # request topics feed the admission queue, responses land back
@@ -1231,12 +1261,22 @@ class FleetBusExecutor(_BusRuntime):
         if fp is not None:
             fp.note("agg_flush", self.kernel.now,
                     f"{kind}/w{w}:{len(pend)}/{len(self.ids)}")
+        hp = self.health_plane
         if kind == "train":
             for s in self.ids:
                 if s in pend or s in self._quarantined:
                     continue
                 self._miss[s] += 1
-                if self._miss[s] >= self.quarantine_after:
+                if hp is not None:
+                    # a missed training flush is a detected sensor fault:
+                    # feed the stream's fault-rate estimate, then read the
+                    # (possibly tightened) threshold back.  Calm pressure
+                    # returns the base knob — static-run byte-identity.
+                    hp.observe_fault("sensor", s, self.kernel.now)
+                    q_after = hp.quarantine_after(s, self.kernel.now)
+                else:
+                    q_after = self.quarantine_after
+                if self._miss[s] >= q_after:
                     self._quarantined[s] = w
                     if fp is not None:
                         fp.note("stream_quarantined", self.kernel.now,
@@ -1411,12 +1451,20 @@ class FleetBusExecutor(_BusRuntime):
                 from repro.serving.quantize import quantize_fleet
 
                 pubs = quantize_fleet(pubs, min_size=self.quant_min_size)
+            hp = self.health_plane
             for s, params_pub in zip(train_ids, pubs):
                 o = out["fleet"][s]
                 payload = {"stream": s, "window": w, "params": params_pub,
                            "eval_preds": o["eval_preds"],
                            "eval_y": o["eval_y"],
                            "checksum": tree_checksum(params_pub)}
+                if hp is not None and hp.sync_key is not None:
+                    # authenticated sync: the crc32 above catches damage in
+                    # transit, the HMAC catches tampering — a forger can
+                    # recompute the checksum but not the keyed signature
+                    from repro.runtime.health import sign_tree
+
+                    payload["sig"] = sign_tree(params_pub, hp.sync_key)
                 nbytes = _nbytes(params_pub)
                 # keep the last publish so a corruption-triggered re-request
                 # can re-send without retraining
@@ -1447,18 +1495,27 @@ class FleetBusExecutor(_BusRuntime):
     def _on_model_sync(self, msg: Message) -> None:
         sid = msg.payload["stream"]
         state = self._fleet.state(sid)
+        hp = self.health_plane
         # verify BEFORE the ordering guard: every corrupted delivery is
         # detected and counted, whether or not it would have installed
         out = self.stages.single.model_sync(
             params=msg.payload["params"],
             eval_preds=msg.payload["eval_preds"],
             eval_y=msg.payload["eval_y"],
-            checksum=msg.payload.get("checksum"))
+            checksum=msg.payload.get("checksum"),
+            signature=msg.payload.get("sig"),
+            sig_key=hp.sync_key if hp is not None else None)
         if not out["ok"]:
-            # checksum mismatch — the transfer happened but a corrupt model
-            # is never served; ask the training site to re-send
+            # checksum or signature mismatch — the transfer happened but a
+            # corrupt/forged model is never served; ask the training site
+            # to re-send (its cached publish carries a valid signature)
             self.ledger.add("model_sync", comp_s=0.0,
                             comm_s=msg.deliver_time - msg.publish_time)
+            if hp is not None:
+                hp.observe_fault("sync", sid, self.kernel.now)
+            if out.values.get("forged") and self.fault_plane is not None:
+                self.fault_plane.note("sync_sig_rejected", self.kernel.now,
+                                      f"{sid}/w{msg.payload['window']}")
             self._request_resync(sid, msg.payload["window"])
             return
         if msg.payload["window"] <= state.window:
@@ -1646,11 +1703,17 @@ class FleetBusExecutor(_BusRuntime):
         params: List[Params] = []
         windows: Dict[StreamId, int] = {}
         fallback: Dict[StreamId, bool] = {}
+        hp = self.health_plane
         for sid in self.ids:
             st = self._fleet.state(sid)
             ctxw = self._qplane.context_window(sid)
-            stale = (st.window >= 0
-                     and ctxw - st.window > self.staleness_bound)
+            # under a health plane the watchdog bound adapts: link suspicion
+            # or sync rejections tighten it toward the floor, so serving
+            # flips to the fallback sooner exactly when fresh models are
+            # least likely to arrive.  Calm pressure returns the base knob.
+            bound = (hp.staleness_bound(sid, self.kernel.now)
+                     if hp is not None else self.staleness_bound)
+            stale = (st.window >= 0 and ctxw - st.window > bound)
             use_fb = st.speed_params is None or stale
             if stale and self.fault_plane is not None:
                 self.fault_plane.note(
@@ -1773,6 +1836,18 @@ class FleetBusExecutor(_BusRuntime):
         self._reset(ids)
         if fp is not None:
             fp.install(self.kernel)
+        hp = self.health_plane
+        if hp is not None:
+            # rewind like the fault plane (byte-identical reruns), then
+            # wire this run's topology, cadence, base thresholds and the
+            # seed-derived signing key
+            hp.reset()
+            hp.bind(sites=list(self.topo.sites),
+                    hb_interval_s=hp.cfg.hb_interval_s or 0.5 * self.period,
+                    halflife_s=hp.cfg.rate_halflife_s or 2.0 * self.period,
+                    quarantine_after=self.quarantine_after,
+                    staleness_bound=self.staleness_bound,
+                    sync_seed=fp.seed if fp is not None else 0)
         n = min(len(s) for s in streams.values())
         if n_windows is not None:
             n = min(n, n_windows)
@@ -1783,6 +1858,7 @@ class FleetBusExecutor(_BusRuntime):
             self._rkeys = refresh_key_chains(key, ids, n)
         ms = self.stages.single.model_sync
         rejected0, verified0 = ms.corrupt_rejected, ms.verified
+        forged0 = ms.forged_rejected
         self._warmup(streams)
         trace: List[Any] = []
         if self._serving_enabled:
@@ -1824,11 +1900,36 @@ class FleetBusExecutor(_BusRuntime):
                         T_CTRL, {"tick": k}, 64.0, ctrl_site))
                 k += 1
 
+        if hp is not None:
+            # the health-plane beats: every site publishes heartbeats on
+            # health/hb/<site> (cross-site deliveries ride the real links —
+            # a partition or crash silences them), and its own loopback
+            # check beat half an interval later, when every healthy peer's
+            # heartbeat has had time to arrive.  Publishes from a down site
+            # are lost by the fault plane, so a dead site's monitor goes
+            # quiet with it.
+            hb = hp.cfg.hb_interval_s or 0.5 * self.period
+            horizon = n * self.period + hb
+            for name in self.topo.sites:
+                k = 1
+                while k * hb <= horizon:
+                    self.kernel.at(
+                        k * hb,
+                        lambda name=name, k=k: self.bus.publish(
+                            stream_topic(T_HEALTH_HB, name),
+                            {"site": name, "k": k}, 32.0, name))
+                    self.kernel.at(
+                        (k + 0.5) * hb,
+                        lambda name=name: self.bus.publish(
+                            stream_topic(T_HEALTH_CHECK, name), {},
+                            32.0, name))
+                    k += 1
+
         for sid in ids:
             injector = BusInjector(self.kernel, self.bus, T_STREAM,
                                    self.dep.site_of("data_injection"),
                                    period_s=self.period, stream_id=sid,
-                                   fault_plane=fp)
+                                   fault_plane=fp, health_plane=hp)
             for w in range(n):
                 data = streams[sid].supervised(w)
                 self._ys[(sid, w)] = data["y"]
@@ -1923,6 +2024,7 @@ class FleetBusExecutor(_BusRuntime):
                 "quarantined": dict(self._quarantined),
                 "corrupt_rejected": ms.corrupt_rejected - rejected0,
                 "checksum_verified": ms.verified - verified0,
+                "forged_rejected": ms.forged_rejected - forged0,
                 "resync_requests": sum(self._resync_sent.values()),
             }
         rf = self.batch_refresh
@@ -1954,4 +2056,5 @@ class FleetBusExecutor(_BusRuntime):
             placement=placement,
             infer_dispatches=infer_dispatches,
             final_params=final_params,
+            health=hp.summary() if hp is not None else None,
         )

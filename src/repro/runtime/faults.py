@@ -16,8 +16,10 @@ seams, so every robustness claim can be *exercised* instead of assumed:
 * **WAN partition/heal** between two sites: deliveries crossing the cut are
   either queued until ``t_heal`` (delayed model sync) or dead-lettered.
 * **sensor faults** (``streams.injection.BusInjector``): whole-window
-  dropout, duplicate windows, out-of-order (jittered) windows and
-  per-record dropout, applied before the window ever reaches the bus.
+  dropout, duplicate windows, out-of-order (jittered) windows, per-record
+  dropout, and Byzantine values (plausible-but-wrong target readings —
+  the case ``runtime.health.ByzantineGuard`` exists to catch), applied
+  before the window ever reaches the bus.
 
 Determinism: all probabilistic draws come from RNGs derived from
 ``(seed, category, spec index[, stream, window])``, so the same seed and
@@ -41,7 +43,8 @@ import numpy as np
 
 INF = float("inf")
 
-MESSAGE_FAULT_KINDS = ("drop", "delay", "duplicate", "reorder", "corrupt")
+MESSAGE_FAULT_KINDS = ("drop", "delay", "duplicate", "reorder", "corrupt",
+                       "forge")
 
 
 @dataclass(frozen=True)
@@ -51,7 +54,7 @@ class MessageFault:
     e.g. ``"model/latest/*"``) published in ``[start, end)``."""
 
     topic: str
-    kind: str  # drop | delay | duplicate | reorder | corrupt
+    kind: str  # drop | delay | duplicate | reorder | corrupt | forge
     p: float = 1.0
     delay_s: float = 0.0  # delay: added latency; duplicate: copy offset
     jitter_s: float = 0.0  # reorder: uniform extra delay in [0, jitter_s)
@@ -112,6 +115,14 @@ class SensorFault:
     p_reorder: float = 0.0
     reorder_jitter_s: float = 1.0
     p_drop_record: float = 0.0
+    # Byzantine values: with probability p_byzantine a window has
+    # byzantine_frac of its target readings offset by byzantine_scale
+    # robust-sigmas — plausible magnitudes (not NaNs or 1e9s) that sail
+    # past range checks and straight into training unless a plausibility
+    # gate (runtime.health.ByzantineGuard) screens them.
+    p_byzantine: float = 0.0
+    byzantine_frac: float = 0.25
+    byzantine_scale: float = 8.0
     start: float = 0.0
     end: float = INF
 
@@ -127,6 +138,10 @@ def tree_checksum(tree: Any) -> int:
     c = 0
     for leaf in jax.tree_util.tree_leaves(tree):
         a = np.ascontiguousarray(np.asarray(leaf))
+        # shape and dtype are part of the digest: two leaves with the same
+        # bytes but different shapes/dtypes (a transposed (m,n)/(n,m) pair,
+        # an int8/uint8 reinterpretation) must not collide
+        c = zlib.crc32(repr((a.shape, a.dtype.str)).encode(), c)
         c = zlib.crc32(a.tobytes(), c)
     return c
 
@@ -149,6 +164,50 @@ def corrupt_tree(tree: Any, rng: np.random.Generator) -> Any:
     leaves = list(leaves)
     leaves[i] = arr
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def forge_tree(tree: Any, rng: np.random.Generator) -> Any:
+    """A *plausible* tampered copy of a params pytree: one float leaf is
+    nudged by small centered noise (~5% of its scale), one int leaf by ±1s
+    — no NaNs, no flipped sign bits, nothing a range check would flag.
+    Unlike :func:`corrupt_tree` (a damaged transfer), this models an
+    adversary in the sync path shipping a wrong-but-well-formed model."""
+    import jax
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    idx = [i for i, l in enumerate(leaves)
+           if hasattr(l, "dtype") and np.asarray(l).size > 0]
+    if not idx:
+        return tree
+    i = idx[int(rng.integers(len(idx)))]
+    arr = np.array(leaves[i], copy=True)
+    if np.issubdtype(arr.dtype, np.floating):
+        scale = 0.05 * (float(np.abs(arr).mean()) + 1e-6)
+        arr = arr + rng.normal(0.0, scale, size=arr.shape).astype(arr.dtype)
+    else:
+        lo = np.iinfo(arr.dtype)
+        arr = np.clip(arr.astype(np.int64)
+                      + rng.integers(-1, 2, size=arr.shape),
+                      lo.min, lo.max).astype(arr.dtype)
+    leaves = list(leaves)
+    leaves[i] = arr
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _forge_payload(payload: Any, rng: np.random.Generator) -> Any:
+    """Forge a model publish *copy*: tamper with the params plausibly and —
+    the attack that motivates authenticated sync — recompute the crc32
+    checksum over the forged tree, so checksum-only verification accepts
+    it.  Any ``sig`` field is left stale (the forger has no run key), so an
+    HMAC-verifying receiver still rejects.  Non-model payloads pass
+    through untouched."""
+    if isinstance(payload, dict) and payload.get("params") is not None:
+        out = dict(payload)
+        out["params"] = forge_tree(out["params"], rng)
+        if "checksum" in out:
+            out["checksum"] = tree_checksum(out["params"])
+        return out
+    return payload
 
 
 def _corrupt_payload(payload: Any, rng: np.random.Generator) -> Any:
@@ -303,6 +362,9 @@ class FaultPlane:
                 elif mf.kind == "corrupt":
                     self.note("msg_corrupt", t_pub, f"{topic}->{dst}")
                     nxt.append((t_i, _corrupt_payload(pl, rng)))
+                elif mf.kind == "forge":
+                    self.note("msg_forge", t_pub, f"{topic}->{dst}")
+                    nxt.append((t_i, _forge_payload(pl, rng)))
             out = nxt
         return out
 
@@ -332,6 +394,24 @@ class FaultPlane:
                                   f"{sid}/w{w}:{int((~keep).sum())}")
                         d = {"x": d["x"][keep], "y": d["y"][keep]}
                     nxt.append((t_i, d))
+                out = nxt
+            if sf.p_byzantine > 0.0 and rng.random() < sf.p_byzantine:
+                nxt = []
+                for t_i, d in out:
+                    y = np.asarray(d["y"])
+                    n = y.shape[0]
+                    k = max(1, int(round(sf.byzantine_frac * n)))
+                    rows = rng.choice(n, size=min(k, n), replace=False)
+                    med = float(np.median(y))
+                    sigma = 1.4826 * float(np.median(np.abs(y - med))) + 1e-6
+                    off = (sigma * sf.byzantine_scale
+                           * rng.choice([-1.0, 1.0], size=(len(rows), 1))
+                           * (1.0 + 0.25 * rng.random(size=(len(rows), 1))))
+                    y2 = np.array(y, copy=True)
+                    y2[rows] = y2[rows] + off.astype(y2.dtype)
+                    self.note("sensor_byzantine", t,
+                              f"{sid}/w{w}:{len(rows)}")
+                    nxt.append((t_i, {"x": d["x"], "y": y2}))
                 out = nxt
             if rng.random() < sf.p_drop_window:
                 self.note("sensor_window_drop", t, f"{sid}/w{w}")

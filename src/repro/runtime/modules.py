@@ -36,6 +36,8 @@ T_REQUEST = "serve/request"
 T_RESPONSE = "serve/response"
 T_RESYNC = "model/rerequest"
 T_CTRL = "ctrl/tick"  # the elastic placement controller's control-plane beat
+T_HEALTH_HB = "health/hb"  # per-site heartbeats: health/hb/<site>
+T_HEALTH_CHECK = "health/check"  # per-site monitor beats: health/check/<site>
 
 
 def stream_topic(base: str, stream_id: str) -> str:

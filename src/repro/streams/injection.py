@@ -69,11 +69,20 @@ class BusInjector:
     A ``fault_plane`` models the sensor itself going bad: each nominal
     window expands (via ``FaultPlane.sensor_windows``) into zero or more
     actual publishes — dropped windows, out-of-order jitter, duplicates,
-    per-record dropout — before the payload ever reaches the bus."""
+    per-record dropout, Byzantine values — before the payload ever reaches
+    the bus.
+
+    A ``health_plane`` screens what the (possibly lying) sensor produced:
+    its :class:`~repro.runtime.health.ByzantineGuard` gates every window's
+    target values through per-stream rolling median/MAD plausibility
+    checks, imputing flagged values before the window reaches the bus —
+    the defense the Byzantine sensor fault exists to exercise.  Clean
+    windows pass through untouched (same array objects), so a fault-free
+    run is byte-identical with or without the guard."""
 
     def __init__(self, kernel, bus, topic: str, site: str,
                  period_s: float = 30.0, stream_id: Optional[str] = None,
-                 fault_plane=None):
+                 fault_plane=None, health_plane=None):
         self.kernel = kernel
         self.bus = bus
         self.topic = topic if stream_id is None else f"{topic}/{stream_id}"
@@ -81,6 +90,7 @@ class BusInjector:
         self.period_s = period_s
         self.stream_id = stream_id
         self.fault_plane = fault_plane
+        self.health_plane = health_plane
         self.injected = 0
 
     def schedule_window(self, w: int, data: dict) -> float:
@@ -89,9 +99,17 @@ class BusInjector:
         publishes)."""
         t = w * self.period_s
         deliveries = [(t, data)]
+        sid = self.stream_id if self.stream_id is not None else ""
         if self.fault_plane is not None:
-            sid = self.stream_id if self.stream_id is not None else ""
             deliveries = self.fault_plane.sensor_windows(sid, w, t, data)
+        if self.health_plane is not None:
+            screened = []
+            for t_i, d in deliveries:
+                d2, n_flagged = self.health_plane.guard.screen(sid, d, t_i)
+                if n_flagged:
+                    self.health_plane.observe_fault("sensor", sid, t_i)
+                screened.append((t_i, d2))
+            deliveries = screened
         for t_i, d in deliveries:
             payload = {"window": w, "x": d["x"], "y": d["y"]}
             if self.stream_id is not None:

@@ -9,11 +9,13 @@
 * ``gradual_drift`` / ``abrupt_drift`` — the paper's Eq. 6 / Eq. 7 drift
   simulators: GD_i(t) = a_i*t + Y_i(t) + eps;  AD_i(t) = a_i*t*lambda + Y_i(t)
   + eps with a random abrupt parameter lambda (piecewise-constant regime
-  switches).
+  switches).  ``seasonal_drift`` extends the menu beyond the paper: a slow
+  periodic component the history never saw, which drifts away and comes
+  back.
 
-* ``apply_scenario`` — name-keyed dispatch over the paper's three drift
-  scenarios ({"none", "gradual", "abrupt"}, Sec. 6.1.3) so launchers and
-  benchmarks can select one from a CLI flag.
+* ``apply_scenario`` — name-keyed dispatch over the drift scenarios
+  ({"none", "gradual", "abrupt"} from the paper's Sec. 6.1.3, plus
+  "seasonal") so launchers and benchmarks can select one from a CLI flag.
 
 * ``turbine_fleet`` — N correlated turbines (a wind farm sharing ambient
   weather) with a per-stream drift scenario each: the multi-stream source
@@ -114,7 +116,36 @@ def abrupt_drift(
     return (series + drift + eps).astype(np.float32)
 
 
-SCENARIOS = ("none", "gradual", "abrupt")
+def seasonal_drift(
+    series: np.ndarray,
+    amp_scale: float = 1.0,
+    period: Optional[int] = None,
+    eps_scale: float = 0.2,
+    seed: int = 3,
+    start: int = 0,
+) -> np.ndarray:
+    """Seasonal drift: SD_i(t) = A_i * sin(2*pi*(t - start)/P + phi_i)
+    + Y_i(t) + eps — a slow periodic component the history never saw, per
+    channel with its own random phase.  Unlike Eq. 6's monotone ramp it
+    drifts away and comes *back*, so a model that adapts to the excursion
+    is wrong again half a period later — the regime the compound chaos
+    scenario was missing.  ``period`` defaults to half the post-``start``
+    length (one full cycle over the live stream)."""
+    rng = np.random.default_rng(seed)
+    n, f = series.shape
+    if period is None:
+        period = max((n - start) // 2, 1)
+    amps = amp_scale * series.std(axis=0)
+    phases = rng.uniform(0.0, 2 * np.pi, f)
+    t = np.maximum(np.arange(n, dtype=np.float64) - start, 0.0)
+    wave = np.sin(2 * np.pi * t[:, None] / period + phases[None])
+    # the drift only exists after start (wave(0) != 0 unless phi is 0)
+    wave *= (t > 0)[:, None]
+    eps = rng.normal(0, eps_scale, (n, f))
+    return (series + amps[None] * wave + eps).astype(np.float32)
+
+
+SCENARIOS = ("none", "gradual", "abrupt", "seasonal")
 
 
 def apply_scenario(
@@ -124,15 +155,18 @@ def apply_scenario(
     alphas: Optional[np.ndarray] = None,
     start: int = 0,
 ) -> np.ndarray:
-    """Apply one of the paper's drift scenarios to a (stationary) series:
+    """Apply one of the drift scenarios to a (stationary) series:
     ``"none"`` returns it untouched, ``"gradual"`` applies Eq. 6,
-    ``"abrupt"`` applies Eq. 7."""
+    ``"abrupt"`` applies Eq. 7, ``"seasonal"`` adds the periodic
+    excursion-and-return component of :func:`seasonal_drift`."""
     if scenario == "none":
         return series
     if scenario == "gradual":
         return gradual_drift(series, alphas=alphas, seed=seed, start=start)
     if scenario == "abrupt":
         return abrupt_drift(series, alphas=alphas, seed=seed, start=start)
+    if scenario == "seasonal":
+        return seasonal_drift(series, seed=seed, start=start)
     raise ValueError(f"unknown scenario {scenario!r}; pick from {SCENARIOS}")
 
 

@@ -1,14 +1,18 @@
 """Chaos-plane tests: kernel pause/resume ordering, dead-letter delivery,
 checksum/corruption primitives, seeded fault-schedule determinism, and the
 end-to-end properties the chaos bench gates on — same seed means a
-byte-identical run, corrupted int8 model publishes are never installed, and
-a stream whose sensor goes totally dark is quarantined without stalling the
-rest of the fleet."""
+byte-identical run, corrupted int8 model publishes are never installed, a
+stream whose sensor goes totally dark is quarantined without stalling the
+rest of the fleet, forged publishes are HMAC-rejected and re-requested,
+partitions are detected within two heartbeat intervals with zero
+fault-free false positives, and the adaptive-threshold path is
+byte-identical to static thresholds when calm."""
 import jax
 import numpy as np
 import pytest
 
 from repro.core.scenarios import (
+    RMSE_RATIO_MAX,
     ChaosHarness,
     bus_signature,
     forecast_signature,
@@ -32,8 +36,13 @@ PERIOD = 5.0
 
 @pytest.fixture(scope="module")
 def harness():
-    return ChaosHarness(n_streams=2, n_windows=3, records_per_window=80,
+    return ChaosHarness(n_streams=2, n_windows=4, records_per_window=80,
                         period_s=PERIOD, qps=6.0)
+
+
+@pytest.fixture(scope="module")
+def fault_free(harness):
+    return harness.run_scenario("fault_free", seed=SEED)
 
 
 # ---------------------------------------------------------------------------
@@ -196,3 +205,146 @@ def test_dark_sensor_stream_is_quarantined_fleet_continues(harness):
             < len(res.results["t01"].records))
     # quarantine must not poison the run: the healthy stream still trains
     assert res.train_dispatches >= 1
+
+
+# ---------------------------------------------------------------------------
+# the health plane (end to end)
+# ---------------------------------------------------------------------------
+
+
+def test_fault_free_run_has_zero_health_false_positives(fault_free):
+    """The detector's floor: a calm run must produce no suspicions, no
+    Byzantine flags, no signature rejections, no threshold adaptations."""
+    env, res = fault_free
+    h = env["health"]
+    assert h["n_suspected"] == 0 and h["n_site_down"] == 0
+    assert h["byz_flagged"] == 0 and h["byz_screened"] > 0
+    assert env["forged_rejected"] == 0
+    assert h["threshold_adaptations"] == 0
+
+
+def test_partition_detected_within_two_heartbeat_intervals(harness):
+    """The goldpinger-style monitors must name the injected partition within
+    two heartbeat intervals of onset, and see the heal as a recovery."""
+    env, res = harness.run_scenario("partitioned_sync", seed=SEED)
+    h = env["health"]
+    assert h["n_suspected"] >= 1
+    assert h["detection_latency_hb_intervals"] <= 2.0
+    assert h["n_recovered"] >= 1
+
+
+def test_forged_sync_always_hmac_rejected_never_installed(harness):
+    """Forge every int8 model publish (valid recomputed crc32): the
+    checksum layer must catch nothing, the HMAC layer must catch all, and
+    no forged model may ever be served."""
+    plane = FaultPlane(SEED, message_faults=[
+        MessageFault("model/latest/*", "forge", p=1.0)])
+    ex = harness.executor(plane, quantized=True, health_plane=harness.health)
+    res = ex.run(harness._base_streams, harness.bp, jax.random.PRNGKey(1))
+    chaos = res.chaos
+    assert chaos["fault_stats"]["msg_forge"] > 0
+    assert chaos["forged_rejected"] == chaos["fault_stats"]["msg_forge"]
+    assert chaos["corrupt_rejected"] == 0  # crc32 accepted every forgery
+    for q in res.queries:
+        assert q.served_fallback or q.model_window < 0
+    assert chaos["resync_requests"] > 0
+
+
+def test_forged_sync_scenario_recovers_via_resync(harness):
+    """At forge p=0.5 the reject -> re-request -> accept loop must land
+    clean models: every forgery rejected, yet speed models still install
+    and serve."""
+    env, res = harness.run_scenario("forged_sync", seed=SEED)
+    assert env["unhandled_exception"] is None
+    assert env["fault_stats"]["msg_forge"] > 0
+    assert env["forged_rejected"] == env["fault_stats"]["msg_forge"]
+    assert env["resync_requests"] > 0
+    # clean (re-sent) publishes made it through both layers and served
+    assert env["checksum_verified"] > 0
+    assert any(q.model_window >= 0 and not q.served_fallback
+               for q in res.queries)
+
+
+def test_byzantine_values_flagged_imputed_within_envelope(harness,
+                                                          fault_free):
+    """Plausible-but-wrong sensor values are flagged by the median/MAD gate
+    and imputed before training — degradation stays inside the scenario's
+    envelope and no stream is quarantined (the windows still flow)."""
+    env, res = harness.run_scenario("byzantine", seed=SEED)
+    env_ff, _ = fault_free
+    h = env["health"]
+    assert h["byz_flagged"] > 0
+    assert env["quarantined"] == {}
+    ratio = env["rmse_hybrid"] / env_ff["rmse_hybrid"]
+    assert ratio <= RMSE_RATIO_MAX["byzantine"]
+
+
+def test_quarantined_stream_revives_under_adaptive_thresholds(harness):
+    """t00 goes dark long enough to be quarantined (misses feed the fault
+    rate, which tightens its quarantine threshold), then its sensor
+    resumes: the stream must be revived and score again by the end."""
+    plane = FaultPlane(SEED, sensor_faults=[
+        SensorFault(stream="t00", p_drop_window=1.0, start=0.9 * PERIOD,
+                    end=2.9 * PERIOD)])
+    ex = harness.executor(plane, health_plane=harness.health)
+    res = ex.run(harness._base_streams, harness.bp, jax.random.PRNGKey(1))
+    stats = res.chaos["fault_stats"]
+    assert stats["stream_quarantined"] >= 1
+    assert stats["quarantine_revived"] >= 1
+    assert "t00" not in res.chaos["quarantined"]  # back in the fleet at end
+    assert len(res.results["t00"].records) >= 1  # scored after revival
+    # the misses registered as fault pressure and tightened the threshold
+    assert res.health["threshold_adaptations"] >= 1
+    assert res.health["adapted_quarantine_after"].get("t00", 99) \
+        < res.health["base_quarantine_after"]
+
+
+def test_adaptive_calm_run_byte_identical_to_static_thresholds(harness,
+                                                               fault_free):
+    """Adaptation must cost nothing when nothing is wrong: the fault-free
+    run under adaptive thresholds is byte-identical — bus log, ledger,
+    forecasts — to the same run under static thresholds."""
+    _, r_adaptive = fault_free
+    _, r_static = harness.run_scenario("fault_free", seed=SEED,
+                                       adaptive=False)
+    assert bus_signature(r_adaptive) == bus_signature(r_static)
+    assert ledger_signature(r_adaptive) == ledger_signature(r_static)
+    assert forecast_signature(r_adaptive) == forecast_signature(r_static)
+
+
+def test_compound_drift_includes_seasonal_and_holds_envelope(harness,
+                                                             fault_free):
+    """The compound scenario's per-stream cycle now includes the seasonal
+    excursion-and-return regime (second in the cycle, so even this
+    2-stream harness exercises it) and must stay inside its envelope."""
+    streams = harness.streams_for("compound_drift")
+    assert len(streams) == harness.n_streams  # gradual + seasonal here
+    env, res = harness.run_scenario("compound_drift", seed=SEED)
+    env_ff, _ = fault_free
+    assert env["unhandled_exception"] is None
+    ratio = env["rmse_hybrid"] / env_ff["rmse_hybrid"]
+    assert ratio <= RMSE_RATIO_MAX["compound_drift"]
+
+
+def test_seasonal_drift_departs_and_returns():
+    """The seasonal scenario's defining property (vs Eq. 6's monotone
+    ramp): the drift component is periodic — it leaves the baseline,
+    crosses back through it inside every cycle, and repeats exactly one
+    period later instead of ramping away forever."""
+    from repro.streams.sources import seasonal_drift
+
+    rng = np.random.default_rng(0)
+    base = rng.normal(0.0, 1.0, (600, 5)).astype(np.float32)
+    period = 200
+    out = seasonal_drift(base, period=period, eps_scale=0.0, seed=3,
+                         start=0)
+    comp = out - base
+    # excursion reaches ~1 sigma ...
+    assert np.abs(comp[1:]).max() > 0.5
+    # ... crosses back through the baseline within each cycle (per channel)
+    per_ch_min = np.abs(comp[1:1 + period]).min(axis=0)
+    assert (per_ch_min < 0.05 * np.abs(comp[1:]).max(axis=0)).all()
+    # ... and repeats: one full period later the component is identical
+    np.testing.assert_allclose(comp[1:1 + period],
+                               comp[1 + period:1 + 2 * period],
+                               rtol=0, atol=1e-4)

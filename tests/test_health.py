@@ -1,0 +1,278 @@
+"""Health-plane units: shape/dtype-aware checksums, HMAC-signed model sync
+vs the checksum-recomputing forger, phi-accrual partition detection,
+Byzantine value screening, and the adaptive-threshold policy (tight under
+fault pressure, byte-identical to the static knobs when calm)."""
+import numpy as np
+import pytest
+
+from repro.runtime.faults import FaultPlane, MessageFault, forge_tree, tree_checksum
+from repro.runtime.health import (
+    ByzantineGuard,
+    FaultRateEstimator,
+    HealthConfig,
+    HealthPlane,
+    PhiAccrual,
+    derive_sync_key,
+    sign_tree,
+    verify_tree,
+)
+
+
+# ---------------------------------------------------------------------------
+# tree_checksum: the shape/dtype regression
+# ---------------------------------------------------------------------------
+
+
+def test_tree_checksum_distinguishes_shape_with_identical_bytes():
+    """The old bytes-only checksum collided a (3, 4) leaf with its (4, 3)
+    reshape — same buffer, different model.  Shape is now part of the
+    serialization."""
+    a = np.arange(12, dtype=np.float32).reshape(3, 4)
+    t1 = {"w": a}
+    t2 = {"w": a.reshape(4, 3)}
+    assert a.tobytes() == t2["w"].tobytes()  # the collision precondition
+    assert tree_checksum(t1) != tree_checksum(t2)
+
+
+def test_tree_checksum_distinguishes_dtype_with_identical_bytes():
+    raw = np.arange(8, dtype=np.int8)
+    t1 = {"q": raw}
+    t2 = {"q": raw.view(np.uint8)}
+    assert t1["q"].tobytes() == t2["q"].tobytes()
+    assert tree_checksum(t1) != tree_checksum(t2)
+
+
+def test_tree_checksum_stable_across_calls():
+    tree = {"w": np.ones((2, 5), np.float32), "b": np.zeros(5, np.int8)}
+    assert tree_checksum(tree) == tree_checksum(tree)
+
+
+# ---------------------------------------------------------------------------
+# signed sync: HMAC catches what crc32 cannot
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "q": np.arange(6, dtype=np.int8)}
+
+
+def test_sign_verify_roundtrip_and_key_separation():
+    key = derive_sync_key(0)
+    tree = _tree()
+    sig = sign_tree(tree, key)
+    assert verify_tree(tree, key, sig)
+    assert not verify_tree(tree, key, None)
+    assert not verify_tree(tree, derive_sync_key(1), sig)
+    assert derive_sync_key(3) == derive_sync_key(3)  # per-seed deterministic
+
+
+def test_forged_tree_passes_recomputed_checksum_but_fails_hmac():
+    """The forge threat model: the adversary perturbs the params and
+    recomputes the crc32, so checksum verification alone would install the
+    tampered model.  Only the keyed HMAC rejects it."""
+    key = derive_sync_key(0)
+    tree = _tree()
+    sig = sign_tree(tree, key)
+    forged = forge_tree(tree, np.random.default_rng(0))
+    # the forger's recomputed checksum is self-consistent ...
+    assert tree_checksum(forged) == tree_checksum(forged)
+    assert tree_checksum(forged) != tree_checksum(tree)
+    # ... so a checksum-only receiver accepts it; the HMAC does not
+    assert not verify_tree(forged, key, sig)
+    assert not verify_tree(forged, key, sign_tree(forged, b"wrong-key" * 4))
+
+
+def test_fault_plane_forge_recomputes_checksum_in_payload():
+    """``MessageFault(kind="forge")`` must emit a payload whose checksum
+    matches its (tampered) params — indistinguishable from clean to crc32."""
+    plane = FaultPlane(0, message_faults=[
+        MessageFault("model/latest/*", "forge", p=1.0)])
+    tree = _tree()
+    payload = {"params": tree, "checksum": tree_checksum(tree),
+               "window": 3, "stream": "t00"}
+    out = plane.plan_deliveries("model/latest/t00", payload, "cloud", "edge",
+                                t_pub=1.0, dt=0.05, bus=None)
+    assert len(out) == 1
+    _, forged = out[0]
+    assert tree_checksum(forged["params"]) == forged["checksum"]
+    assert tree_checksum(forged["params"]) != tree_checksum(tree)
+    assert plane.stats["msg_forge"] == 1
+
+
+# ---------------------------------------------------------------------------
+# phi-accrual partition detection
+# ---------------------------------------------------------------------------
+
+
+def test_phi_accrual_rises_only_when_heartbeats_stop():
+    tr = PhiAccrual(expected_s=1.0, window=16)
+    for k in range(1, 9):
+        tr.arrive(float(k), healthy=True)
+    assert tr.phi(8.4) == pytest.approx(0.4, abs=0.05)
+    assert tr.phi(9.8) == pytest.approx(1.8, abs=0.05)  # silence grows phi
+    tr.arrive(10.0, healthy=True)
+    assert tr.phi(10.1) < 0.2
+
+
+def test_phi_accrual_excludes_outage_gap_from_baseline():
+    """The outage interval itself (and burst arrivals after a heal) must not
+    inflate the learned cadence, or detection would go numb post-heal."""
+    tr = PhiAccrual(expected_s=1.0, window=16)
+    for k in range(1, 6):
+        tr.arrive(float(k), healthy=True)
+    tr.arrive(15.0, healthy=False)  # first hb after a 10s outage
+    assert tr.mean() == pytest.approx(1.0, abs=1e-6)
+    tr.arrive(15.1, healthy=True)  # burst release: gap 0.1 < 0.25*expected
+    assert tr.mean() == pytest.approx(1.0, abs=1e-6)
+
+
+def test_site_monitor_escalates_and_recovers():
+    cfg = HealthConfig()
+    hp = HealthPlane(cfg)
+    hp.bind(sites=["edge", "cloud"], hb_interval_s=1.0, halflife_s=2.0,
+            quarantine_after=3, staleness_bound=1, sync_seed=0)
+    for k in range(1, 7):
+        hp.observe_heartbeat("edge", "cloud", float(k))
+        hp.check("edge", k + 0.5)
+    assert hp.verdict_stats.get("partition_suspected", 0) == 0
+    # cloud goes silent: suspicion then site_down at the phi thresholds
+    hp.check("edge", 7.5)   # phi 1.5 >= 1.4 -> suspected
+    hp.check("edge", 8.5)   # phi 2.5: still suspected
+    hp.check("edge", 9.5)   # phi 3.5 >= 3.2 -> down
+    assert hp.verdict_stats["partition_suspected"] == 1
+    assert hp.verdict_stats["site_down"] == 1
+    assert hp.first_verdict_t("partition_suspected") == 7.5
+    hp.observe_heartbeat("edge", "cloud", 10.0)
+    assert hp.verdict_stats["recovered"] == 1
+
+
+def test_site_monitor_rebaselines_after_its_own_outage():
+    """A monitor whose own site was down must not blame peers for the
+    heartbeats it was not alive to receive."""
+    cfg = HealthConfig()
+    hp = HealthPlane(cfg)
+    hp.bind(sites=["edge", "cloud"], hb_interval_s=1.0, halflife_s=2.0,
+            quarantine_after=3, staleness_bound=1, sync_seed=0)
+    for k in range(1, 4):
+        hp.observe_heartbeat("edge", "cloud", float(k))
+        hp.check("edge", k + 0.5)
+    # the edge monitor itself goes dark for 5s, then its checks resume
+    hp.check("edge", 8.5)
+    assert hp.verdict_stats.get("monitor_gap", 0) == 1
+    assert hp.verdict_stats.get("partition_suspected", 0) == 0
+    hp.observe_heartbeat("edge", "cloud", 9.0)
+    hp.check("edge", 9.5)
+    assert hp.verdict_stats.get("partition_suspected", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# Byzantine guard
+# ---------------------------------------------------------------------------
+
+
+def _warm_guard(cfg):
+    g = ByzantineGuard(cfg)
+    rng = np.random.default_rng(0)
+    base = rng.normal(10.0, 1.0, 200).astype(np.float32)
+    g.screen("t00", {"x": np.zeros((200, 5), np.float32), "y": base}, 0.0)
+    return g
+
+
+def test_byzantine_guard_flags_and_imputes_outliers():
+    cfg = HealthConfig()
+    g = _warm_guard(cfg)
+    y = np.array([10.0, 10.5, 60.0, 9.5], np.float32)  # 60 is ~50 sigma off
+    out, n = g.screen("t00", {"x": np.zeros((4, 5), np.float32), "y": y},
+                      1.0)
+    assert n == 1
+    assert out["y"][2] != 60.0  # imputed with the rolling median
+    assert abs(out["y"][2] - 10.0) < 1.0
+    assert list(out["y"][[0, 1, 3]]) == [10.0, 10.5, 9.5]
+    assert g.flagged["t00"] == 1
+
+
+def test_byzantine_guard_returns_original_objects_when_clean():
+    """Calm-path byte-identity: no copy, no reallocation — the exact arrays
+    go through."""
+    cfg = HealthConfig()
+    g = _warm_guard(cfg)
+    data = {"x": np.zeros((4, 5), np.float32),
+            "y": np.array([10.0, 9.8, 10.2, 10.1], np.float32)}
+    out, n = g.screen("t00", data, 1.0)
+    assert n == 0
+    assert out is data
+
+
+def test_byzantine_guard_inactive_until_min_history():
+    cfg = HealthConfig(byz_min_history=48)
+    g = ByzantineGuard(cfg)
+    y = np.array([1e6], np.float32)  # absurd, but no baseline yet
+    out, n = g.screen("t00", {"x": np.zeros((1, 5), np.float32), "y": y},
+                      0.0)
+    assert n == 0 and out["y"][0] == 1e6
+
+
+# ---------------------------------------------------------------------------
+# fault-rate estimation + adaptive thresholds
+# ---------------------------------------------------------------------------
+
+
+def test_fault_rate_estimator_decays_by_halflife():
+    est = FaultRateEstimator(halflife_s=10.0)
+    est.observe(0.0)
+    est.observe(0.0)
+    assert est.pressure(0.0) == pytest.approx(2.0)
+    assert est.pressure(10.0) == pytest.approx(1.0)
+    assert est.pressure(20.0) == pytest.approx(0.5)
+
+
+def test_adaptive_thresholds_tighten_under_rising_fault_rate():
+    hp = HealthPlane(HealthConfig())
+    hp.bind(sites=["edge", "cloud"], hb_interval_s=1.0, halflife_s=10.0,
+            quarantine_after=3, staleness_bound=2, sync_seed=0)
+    # calm: base values exactly, nothing recorded
+    assert hp.quarantine_after("t00", 0.0) == 3
+    assert hp.staleness_bound("t00", 0.0) == 2
+    assert hp.adaptations == []
+    # one isolated fault is not a *rate*: still the base knob
+    hp.observe_fault("sensor", "t00", 1.0)
+    assert hp.quarantine_after("t00", 1.0) == 3
+    # a burst inside the halflife is: the threshold tightens, floored
+    for t in (2.0, 2.5, 3.0, 3.5):
+        hp.observe_fault("sensor", "t00", t)
+    tightened = hp.quarantine_after("t00", 4.0)
+    assert 1 <= tightened < 3
+    assert len(hp.adaptations) >= 1
+    assert hp.summary()["adapted_quarantine_after"]["t00"] == tightened
+    # an unaffected stream keeps the base knob
+    assert hp.quarantine_after("t01", 4.0) == 3
+    # link suspicion tightens the staleness watchdog fleet-wide
+    for t in (2.0, 2.5, 3.0, 3.5):
+        hp.observe_fault("link", "cloud", t)
+    assert hp.staleness_bound("t00", 4.0) < 2
+    # pressure decays: far enough out, everything returns to base
+    assert hp.quarantine_after("t00", 500.0) == 3
+    assert hp.staleness_bound("t00", 500.0) == 2
+
+
+def test_static_plane_never_adapts():
+    hp = HealthPlane(HealthConfig(adaptive=False))
+    hp.bind(sites=["edge", "cloud"], hb_interval_s=1.0, halflife_s=10.0,
+            quarantine_after=3, staleness_bound=2, sync_seed=0)
+    for t in (1.0, 1.2, 1.4, 1.6, 1.8):
+        hp.observe_fault("sensor", "t00", t)
+    assert hp.quarantine_after("t00", 2.0) == 3
+    assert hp.staleness_bound("t00", 2.0) == 2
+    assert hp.adaptations == []
+
+
+def test_health_plane_reset_rewinds_everything():
+    hp = HealthPlane(HealthConfig())
+    hp.bind(sites=["edge", "cloud"], hb_interval_s=1.0, halflife_s=10.0,
+            quarantine_after=3, staleness_bound=1, sync_seed=0)
+    hp.observe_fault("sensor", "t00", 1.0)
+    hp.verdict(1.0, "partition_suspected", "edge", "cloud")
+    hp.reset()
+    assert hp.verdicts == [] and hp.pressure("sensor", "t00", 1.0) == 0.0
+    assert hp.sync_key is None  # until the next bind
